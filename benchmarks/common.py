@@ -1,0 +1,19 @@
+"""Shared benchmark utilities."""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def timed(fn, *args, repeats: int = 1, **kwargs):
+    """Returns (result, seconds_per_call)."""
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    return out, (time.time() - t0) / repeats
+
+
+def row(name: str, us_per_call: float, derived: str):
+    return f"{name},{us_per_call:.1f},{derived}"

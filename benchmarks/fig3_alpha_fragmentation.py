@@ -1,0 +1,37 @@
+"""Paper Fig. 3/5: heavier LD tails (smaller alpha) fragment the embedding
+into finer clusters.  Reports DBSCAN cluster counts per alpha on the
+mnist-like manifold mixture, under a continual optimisation (no restart
+between alpha levels -- the interactive-sweep regime).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import funcsne
+from repro.core.dbscan import dbscan, relabel_compact
+from repro.data.synthetic import mnist_like
+
+
+def run(n=1200, warmup=400, per_level=250, alphas=(3.0, 1.0, 0.5)):
+    X, _ = mnist_like(n=n, dim=48, n_classes=10, seed=0)
+    Xj = jnp.asarray(X)
+    cfg = funcsne.FuncSNEConfig(n_points=n, dim_hd=48)
+    base = funcsne.default_hparams(n, perplexity=12.0)
+    st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+    step = funcsne.make_step(cfg)
+    for it in range(warmup):
+        st = step(st, Xj, funcsne.default_schedule(it, warmup, base))
+    rows = []
+    for alpha in alphas:
+        hp = base._replace(alpha=jnp.float32(alpha),
+                           lr=base.lr * 0.3)
+        for _ in range(per_level):
+            st = step(st, Xj, hp)
+        Y = np.asarray(st.Y)
+        sub = Y[:: max(1, n // 1024)]
+        d = np.sqrt(((sub[:, None] - sub[None, :]) ** 2).sum(-1))
+        eps = float(np.quantile(d[d > 0], 0.02))
+        _, k = relabel_compact(dbscan(jnp.asarray(Y), eps, 5))
+        rows.append(row(f"fig3_alpha{alpha}", 0.0, f"clusters={k}"))
+    return rows

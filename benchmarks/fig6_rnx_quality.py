@@ -1,0 +1,46 @@
+"""Paper Fig. 6: multi-scale R_NX(K) curves, FUnc-SNE vs the
+negative-sampling-only (UMAP-regime) baseline vs exact variable-tail t-SNE
+(quality oracle standing in for FIt-SNE at this N), on 3 datasets:
+transcriptomics stand-in ('cells'), Gaussian blobs, COIL-style rings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import baselines, funcsne
+from repro.core.quality import embedding_rnx_curve, rnx_auc
+from repro.data.synthetic import blobs, coil_rings, hierarchical_cells
+
+
+def _datasets(n):
+    yield "cells", hierarchical_cells(n=n, dim=24, seed=0)[0]
+    yield "blobs", blobs(n=n, dim=32, n_centers=5, center_std=6.0, seed=0)[0]
+    yield "coil", coil_rings(n_objects=max(6, n // 72), n_per_object=72,
+                             dim=24, seed=0)[0]
+
+
+def run(n=1100, iters=500):
+    rows = []
+    for name, X in _datasets(n):
+        Xj = jnp.asarray(X)
+        m = X.shape[0]
+        hp = funcsne.default_hparams(m, perplexity=10.0)
+        st, dt_ours = timed(lambda: funcsne.fit(X, n_iter=iters,
+                                                hparams=hp)[0])
+        Yn, dt_ns = timed(lambda: baselines.negative_sampling_embed(
+            X, n_iter=iters, hparams=hp))
+        Yt, dt_ex = timed(lambda: baselines.exact_tsne(X, n_iter=min(iters,
+                                                                     350),
+                                                       perplexity=10.0))
+        for meth, Y, dt in (("funcsne", st.Y, dt_ours), ("ns_only", Yn,
+                                                         dt_ns),
+                            ("exact", Yt, dt_ex)):
+            c = np.asarray(embedding_rnx_curve(Xj, jnp.asarray(Y),
+                                               kmax=m // 2))
+            ks = [9, 49, m // 4 - 1, m // 2 - 1]
+            derived = (f"auc={float(rnx_auc(jnp.asarray(c))):.3f};"
+                       + ";".join(f"K{k+1}={c[k]:.3f}" for k in ks))
+            rows.append(row(f"fig6_{name}_{meth}", dt * 1e6 / iters,
+                            derived))
+    return rows

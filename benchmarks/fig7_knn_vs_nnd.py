@@ -1,0 +1,46 @@
+"""Paper Fig. 7: the joint iterative KNN vs nearest-neighbour descent on
+'Overlapping' and 'Disjointed' blob regimes.  The paper's claim: NND's
+greedy local join traps in local minima on isolated clusters; FUnc-SNE's
+random probes + cross-space candidates escape them.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import funcsne
+from repro.core.nnd import NNDConfig, nnd
+from repro.core.quality import knn_set_quality
+from repro.data.synthetic import blobs, disjoint_blobs
+
+
+def run(n=1500, iters=400):
+    rows = []
+    data = {
+        "overlapping": blobs(n=n, dim=32, n_centers=5, center_std=1.0,
+                             blob_std=1.0, seed=0)[0],
+        "disjointed": disjoint_blobs(n=n, dim=32, n_centers=n // 30,
+                                     seed=0)[0],
+    }
+    for name, X in data.items():
+        Xj = jnp.asarray(X)
+        m = X.shape[0]
+        (idx, d, hist), dt = timed(lambda: nnd(X, NNDConfig(k=16),
+                                               max_iter=30))
+        rows.append(row(f"fig7_{name}_nnd", dt * 1e6 / max(len(hist), 1),
+                        f"auc={float(knn_set_quality(idx, Xj)):.3f};"
+                        f"iters={len(hist)}"))
+        cfg = funcsne.FuncSNEConfig(n_points=m, dim_hd=32, k_hd=16)
+        hp = funcsne.default_hparams(m, perplexity=10.0)
+
+        def run_funcsne():
+            st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+            step = funcsne.make_step(cfg)
+            for _ in range(iters):
+                st = step(st, Xj, hp)
+            return st
+
+        st, dt2 = timed(run_funcsne)
+        rows.append(row(f"fig7_{name}_funcsne", dt2 * 1e6 / iters,
+                        f"auc={float(knn_set_quality(st.hd_idx, Xj)):.3f};"
+                        f"iters={iters}"))
+    return rows

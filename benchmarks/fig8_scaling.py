@@ -1,0 +1,48 @@
+"""Paper Fig. 8: wall time vs dataset size at fixed dim (32).
+
+Verifies the O(N) per-iteration claim: time/iter should grow ~linearly in
+N (slope ratio reported).  Also compares the always-refine-HD variant
+(paper's dashed line) against the default probabilistic refresh.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import funcsne
+from repro.data.synthetic import blobs
+
+
+def run(sizes=(512, 1024, 2048, 4096), iters=120):
+    rows = []
+    per_iter = {}
+    for n in sizes:
+        X, _ = blobs(n=n, dim=32, n_centers=8, center_std=6.0, seed=0)
+        Xj = jnp.asarray(X)
+        for always, tag in ((False, "default"), (True, "always_refine")):
+            cfg = funcsne.FuncSNEConfig(
+                n_points=n, dim_hd=32,
+                min_refresh_prob=1.0 if always else 0.05)
+            hp = funcsne.default_hparams(n)
+            st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+            step = funcsne.make_step(cfg)
+            st = step(st, Xj, hp)           # compile
+            jax.block_until_ready(st.Y)
+
+            def loop(st=st):
+                s = st
+                for _ in range(iters):
+                    s = step(s, Xj, hp)
+                jax.block_until_ready(s.Y)
+                return s
+
+            _, dt = timed(loop)
+            us = dt * 1e6 / iters
+            per_iter[(tag, n)] = us
+            rows.append(row(f"fig8_n{n}_{tag}", us, f"n={n}"))
+    slope = (per_iter[("default", sizes[-1])]
+             / max(per_iter[("default", sizes[0])], 1e-9))
+    ideal = sizes[-1] / sizes[0]
+    rows.append(row("fig8_linearity", 0.0,
+                    f"t({sizes[-1]})/t({sizes[0]})={slope:.2f};"
+                    f"ideal={ideal:.1f}"))
+    return rows

@@ -1,0 +1,79 @@
+"""Format the EXPERIMENTS.md roofline table from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "embed_1m"]
+ARCH_ORDER = ["chameleon-34b", "olmoe-1b-7b", "deepseek-v2-236b",
+              "zamba2-2.7b", "mamba2-130m", "yi-34b", "qwen2.5-14b",
+              "gemma2-2b", "qwen2-7b", "musicgen-large", "funcsne-1m"]
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6),
+                        ("ns", 1e-9)):
+        if x >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def load(mesh):
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            f = RESULTS / f"{arch}__{shape}__{mesh}.json"
+            if f.exists():
+                rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def table(mesh="single", md=True):
+    rows = load(mesh)
+    out = []
+    hdr = ("| arch | shape | compute | memory | collective | bottleneck | "
+           "6ND/HLO | HBM/chip | fits? |")
+    out.append(hdr)
+    out.append("|" + "---|" * 9)
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"skipped | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"ERROR | - | - | - |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory") or {}
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2 ** 30
+        fits = "yes" if hbm and hbm < 16 else ("~" if hbm else "?")
+        ratio = r.get("model_flops_ratio", 0.0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{t['bottleneck']} | {ratio:.2f} | {hbm:.1f}GiB | {fits} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    args = ap.parse_args()
+    print(table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Each module's ``run()``
+reproduces the measurement behind the corresponding paper artifact at
+CPU-feasible scale; the roofline table (EXPERIMENTS.md) comes from the
+dry-run (repro.launch.dryrun), not from here.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig8] [--fast]
+"""
+import argparse
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+MODULES = ["fig4_feedback_loop", "fig6_rnx_quality", "fig7_knn_vs_nnd",
+           "fig8_scaling", "table2_one_shot", "fig3_alpha_fragmentation"]
+
+FAST_KW = {
+    "fig4_feedback_loop": dict(n=600, iters=120, probe_every=60),
+    "fig6_rnx_quality": dict(n=600, iters=250),
+    "fig7_knn_vs_nnd": dict(n=800, iters=200),
+    "fig8_scaling": dict(sizes=(512, 1024, 2048), iters=60),
+    "table2_one_shot": dict(n=800, iters=300),
+    "fig3_alpha_fragmentation": dict(n=700, warmup=250, per_level=150),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI)")
+    args = ap.parse_args()
+
+    selected = MODULES
+    if args.only:
+        keys = args.only.split(",")
+        selected = [m for m in MODULES if any(m.startswith(k) for k in keys)]
+
+    print("name,us_per_call,derived")
+    for mod_name in selected:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            kwargs = FAST_KW.get(mod_name, {}) if args.fast else {}
+            for r in mod.run(**kwargs):
+                print(r, flush=True)
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            print(f"# {mod_name} FAILED:", flush=True)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps with
+checkpoint/restart (thin wrapper over repro.launch.train).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen2-7b", "--reduce",
+                "--steps", "300", "--batch", "8", "--seq", "256",
+                "--ckpt-dir", "checkpoints/example_train"] + sys.argv[1:]
+    from repro.launch.train import main
+    main()

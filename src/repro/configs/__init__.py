@@ -1,0 +1,4 @@
+"""Architecture configs: the 10 assigned archs + reduced smoke variants."""
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, ShapeSpec, SHAPES, get_arch, list_archs, smoke_variant)

@@ -1,0 +1,10 @@
+"""Qwen2-7B [dense]: GQA kv=4 with QKV bias (arXiv:2407.10671)."""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="qwen2-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab_size=152064, head_dim=128,
+    qkv_bias=True, rope_theta=1000000.0,
+    logits_chunks=8,
+))

@@ -1,0 +1,18 @@
+"""FUnc-SNE core: the paper's contribution as composable JAX modules.
+
+Public surface:
+  funcsne     -- config/state/step/fit + shard_map distribution
+  affinities  -- perplexity-calibrated HD similarities
+  knn         -- joint iterative KNN machinery
+  ld_kernels  -- variable-tail LD kernel + exact losses
+  quality     -- R_NX(K) / AUC criteria, 1-NN evaluation
+  nnd         -- nearest-neighbour descent baseline
+  baselines   -- exact variable-tail t-SNE, NS-only (UMAP-regime) embedding
+  dbscan, hierarchy -- alpha-sweep cluster-graph extraction
+"""
+
+from repro.core.funcsne import (  # noqa: F401
+    AxisCtx, FuncSNEConfig, FuncSNEState, HParams, add_points,
+    default_hparams, default_schedule, fit, funcsne_step, init_state,
+    make_distributed_step, make_step, pca_directions, remove_points,
+    rescale_embedding)

@@ -1,0 +1,81 @@
+"""HD affinities: perplexity-calibrated per-point bandwidths (paper Eq. 1).
+
+t-SNE models the HD neighbourhood of point i as
+  p_{j|i} = exp(-beta_i * d2_ij) / sum_k exp(-beta_i * d2_ik),
+with beta_i = 1/(2 sigma_i^2) solved so that the row entropy equals
+log(perplexity).  FUnc-SNE solves this over the *current estimated* KNN set
+and refreshes only flagged rows (warm restart) as the neighbour sets improve.
+
+The solver is a vectorised bisection with exponential bracket expansion; a
+warm start (previous beta as first probe) halves the bracket immediately,
+which is the TPU-friendly equivalent of the paper's warm restart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INF = jnp.inf
+
+
+def entropy_of_beta(d2, beta, valid):
+    """Shannon entropy (nats) of the p_{.|i} row for bandwidth beta.
+
+    d2: (..., K) squared distances; valid: (..., K) bool; beta: (...,).
+    Shift-invariant in d2 (normalised), so we subtract the row min.
+    """
+    d2s = jnp.where(valid, d2, _INF)
+    dmin = jnp.min(jnp.where(valid, d2, _INF), axis=-1, keepdims=True)
+    dmin = jnp.where(jnp.isfinite(dmin), dmin, 0.0)
+    logits = -beta[..., None] * (d2s - dmin)
+    logits = jnp.where(valid, logits, -_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(valid, jnp.exp(logits - m), 0.0)
+    z = jnp.sum(e, axis=-1)
+    p = e / jnp.maximum(z[..., None], 1e-30)
+    plogp = jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)), 0.0)
+    return -jnp.sum(plogp, axis=-1)
+
+
+def solve_beta(d2, perplexity, valid=None, beta0=None, n_iter: int = 40):
+    """Vectorised bisection for beta_i s.t. H_i = log(perplexity).
+
+    Entropy is monotonically decreasing in beta.  Bracket: [0, inf) with
+    exponential expansion while the upper bound is open.  ``beta0`` warm-starts
+    the first probe (paper's warm restart).
+    """
+    if valid is None:
+        valid = jnp.isfinite(d2)
+    target = jnp.log(jnp.asarray(perplexity, jnp.float32))
+    n = d2.shape[0]
+    beta = (jnp.ones((n,), jnp.float32) if beta0 is None
+            else jnp.asarray(beta0, jnp.float32))
+    lo = jnp.zeros((n,), jnp.float32)
+    hi = jnp.full((n,), _INF, jnp.float32)
+
+    def body(_, carry):
+        beta, lo, hi = carry
+        h = entropy_of_beta(d2, beta, valid)
+        too_flat = h > target          # entropy too high -> increase beta
+        lo = jnp.where(too_flat, beta, lo)
+        hi = jnp.where(too_flat, hi, beta)
+        beta_up = jnp.where(jnp.isfinite(hi), 0.5 * (lo + hi), beta * 2.0)
+        beta_dn = 0.5 * (lo + hi)
+        beta = jnp.where(too_flat, beta_up, beta_dn)
+        return beta, lo, hi
+
+    beta, _, _ = jax.lax.fori_loop(0, n_iter, body, (beta, lo, hi))
+    return beta
+
+
+def p_rows(d2, beta, valid=None):
+    """Row-normalised p_{j|i} over the (estimated) KNN set."""
+    if valid is None:
+        valid = jnp.isfinite(d2)
+    d2s = jnp.where(valid, d2, _INF)
+    dmin = jnp.min(d2s, axis=-1, keepdims=True)
+    dmin = jnp.where(jnp.isfinite(dmin), dmin, 0.0)
+    e = jnp.where(valid, jnp.exp(-beta[:, None] * (d2s - dmin)), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, 1e-30)

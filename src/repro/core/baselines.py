@@ -1,0 +1,149 @@
+"""Baselines the paper compares against, in the same JAX substrate.
+
+- ``exact_tsne``: O(N^2) gradient descent on the exact variable-tail KL
+  (Eqs. 4-5).  This is the quality oracle: FIt-SNE/BH-t-SNE are
+  *approximations of this exact gradient* (their quality at small N matches
+  it), so at benchmark scale it stands in for FIt-SNE; it also validates
+  FUnc-SNE's force decomposition against jax.grad of the true loss.
+- ``negative_sampling_embed``: the UMAP/LargeVis regime inside our force
+  machinery -- two-phase (exact KNN precomputed, fixed), attraction over HD
+  neighbours, repulsion by *negative sampling only* (no LD-neighbour term).
+  Ablating the paper's middle term of Eq. 6 isolates its contribution
+  (paper Table 1 row 1 vs row 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affinities
+from repro.core import knn as knn_lib
+from repro.core.funcsne import HParams, default_hparams, default_schedule
+from repro.core.ld_kernels import (kl_loss, pairwise_sqdists_full, w_tail,
+                                   w_pow_inv_alpha)
+from repro.kernels.ne_forces.ops import ne_forces
+
+
+def exact_p_matrix(X, perplexity: float):
+    """Dense symmetrised p_ij from exact pairwise distances (Eq. 1)."""
+    n = X.shape[0]
+    d2 = pairwise_sqdists_full(X)
+    d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)  # not eye*inf: 0*inf=NaN
+    beta = affinities.solve_beta(d2, perplexity)
+    p_cond = affinities.p_rows(d2, beta)
+    return (p_cond + p_cond.T) / (2.0 * n)
+
+
+def exact_tsne_grad(Y, P, alpha):
+    """Analytic Eq. 5 gradient: 4 sum_j (p_ij - q_ij) w^(1/alpha) (y_i-y_j)."""
+    n = Y.shape[0]
+    d2 = pairwise_sqdists_full(Y)
+    w = w_tail(d2, alpha) * (1.0 - jnp.eye(n))
+    q = w / jnp.sum(w)
+    wi = w_pow_inv_alpha(d2, alpha)
+    m = (P - q) * wi
+    # grad_i = 4 [ y_i * sum_j m_ij - sum_j m_ij y_j ]
+    return 4.0 * (Y * jnp.sum(m, axis=1, keepdims=True) - m @ Y)
+
+
+def exact_tsne(X=None, P=None, *, dim_ld: int = 2, alpha: float = 1.0,
+               perplexity: float = 30.0, n_iter: int = 500, rng=None,
+               lr: float = None, use_autodiff: bool = False, Y0=None):
+    """Exact (quadratic) variable-tail t-SNE with gains + momentum."""
+    if P is None:
+        P = exact_p_matrix(jnp.asarray(X, jnp.float32), perplexity)
+    n = P.shape[0]
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    if lr is None:
+        lr = max(50.0, n / 12.0)
+    Y = (jax.random.normal(rng, (n, dim_ld)) * 1e-2 if Y0 is None
+         else jnp.asarray(Y0, jnp.float32))
+    vel = jnp.zeros_like(Y)
+    gains = jnp.ones_like(Y)
+
+    grad_fn = (jax.grad(lambda y: kl_loss(P, y, alpha)) if use_autodiff
+               else lambda y, p=P: exact_tsne_grad(y, p, alpha))
+
+    @jax.jit
+    def step(carry, ex):
+        Y, vel, gains = carry
+        g = grad_fn(Y) if use_autodiff else exact_tsne_grad(Y, P * ex, alpha)
+        # note: exaggeration multiplies the attractive p term only
+        dY = -g
+        same = jnp.sign(dY) == jnp.sign(vel)
+        gains = jnp.clip(jnp.where(same, gains + 0.2, gains * 0.8), 0.01)
+        vel = 0.8 * vel + lr * gains * dY
+        return (Y + vel, vel, gains), None
+
+    for it in range(n_iter):
+        ex = 12.0 if it < n_iter // 4 else 1.0
+        (Y, vel, gains), _ = step((Y, vel, gains), ex)
+    return Y
+
+
+@dataclasses.dataclass(frozen=True)
+class NSConfig:
+    """Negative-sampling-only (UMAP-regime) embedding config."""
+    k_hd: int = 32
+    n_negatives: int = 8
+    backend: str = "auto"
+
+
+def negative_sampling_embed(X, *, cfg: NSConfig = NSConfig(),
+                            dim_ld: int = 2, n_iter: int = 750,
+                            hparams: HParams = None, rng=None):
+    """Two-phase NS-only baseline (UMAP/LargeVis regime).
+
+    Phase 1: exact KNN + perplexity calibration (fixed thereafter).
+    Phase 2: attraction over the KNN graph, repulsion from uniform negative
+    samples only.  Identical kernels/optimiser to FUnc-SNE; the only
+    difference is the missing LD-neighbour repulsion term and the frozen
+    neighbour sets.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    n = X.shape[0]
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    if hparams is None:
+        hparams = default_hparams(n)
+    r_y, r_it = jax.random.split(rng)
+
+    idx, d2 = knn_lib.exact_knn(X, cfg.k_hd)
+    beta = affinities.solve_beta(d2, hparams.perplexity)
+    p = affinities.p_rows(d2, beta)
+    Y = jax.random.normal(r_y, (n, dim_ld)) * 1e-2
+    vel = jnp.zeros_like(Y)
+    gains = jnp.ones_like(Y)
+    zhat = jnp.float32(float(n))
+
+    @jax.jit
+    def step(carry, rng, hp: HParams):
+        Y, vel, gains, zhat, it = carry
+        coef_a = p / (2.0 * n)
+        agg_a, edge_a, _ = ne_forces(Y, Y[idx], coef_a, hp.alpha,
+                                     mode="attraction", backend=cfg.backend)
+        neg = jax.random.randint(rng, (n, cfg.n_negatives), 0, n)
+        ones = jnp.ones((n, cfg.n_negatives), jnp.float32)
+        agg_n, _, wsum_n = ne_forces(Y, Y[neg], ones, hp.alpha,
+                                     mode="repulsion", backend=cfg.backend)
+        scale = (n - 1.0) / cfg.n_negatives
+        z_est = jnp.maximum(scale * jnp.sum(wsum_n), 1e-8)
+        zhat = jnp.where(it == 0, z_est, 0.9 * zhat + 0.1 * z_est)
+        buf = hp.attraction * hp.exaggeration * agg_a \
+            + hp.repulsion * scale / zhat * agg_n
+        buf = buf.at[idx.reshape(-1)].add(
+            -(hp.attraction * hp.exaggeration * edge_a).reshape(-1, Y.shape[1]))
+        dY = 4.0 * buf
+        same = jnp.sign(dY) == jnp.sign(vel)
+        gains = jnp.clip(jnp.where(same, gains + 0.2, gains * 0.8), 0.01)
+        vel = hp.momentum * vel + hp.lr * gains * dY
+        return (Y + vel, vel, gains, zhat, it + 1)
+
+    carry = (Y, vel, gains, zhat, jnp.int32(0))
+    for it in range(n_iter):
+        hp = default_schedule(it, n_iter, hparams)
+        carry = step(carry, jax.random.fold_in(r_it, it), hp)
+    return carry[0]

@@ -1,0 +1,61 @@
+"""Dense JAX DBSCAN (Ester et al., 1996) for the hierarchy extraction.
+
+O(N^2) adjacency + min-label propagation: adequate for the embedding
+snapshots the hierarchy pass clusters (N up to a few 10^4).  The paper uses
+DBSCAN on LD snapshots because NE broadens inter-cluster gaps, making
+density clustering easy (paper Sec. 4.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dbscan(Y, eps: float, min_pts: int = 5, max_sweeps: int = 0):
+    """Returns integer labels; -1 = noise.
+
+    Core points: >= min_pts neighbours within eps (inclusive of self).
+    Clusters: connected components of the core-core eps-graph; border
+    points adopt the label of their nearest core neighbour within eps.
+    """
+    Y = jnp.asarray(Y, jnp.float32)
+    n = Y.shape[0]
+    if max_sweeps <= 0:
+        max_sweeps = int(jnp.ceil(jnp.log2(n))) + 2
+    n2 = jnp.sum(Y * Y, axis=1)
+    d2 = jnp.maximum(n2[:, None] + n2[None, :] - 2.0 * (Y @ Y.T), 0.0)
+    within = d2 <= eps * eps
+    core = jnp.sum(within, axis=1) >= min_pts
+
+    adj = within & core[:, None] & core[None, :]        # core-core edges
+    adj = adj | jnp.diag(core)
+    labels = jnp.where(core, jnp.arange(n), n)          # n = unassigned
+
+    def sweep(_, lab):
+        # propagate the min label across core-core edges
+        neigh = jnp.where(adj, lab[None, :], n)
+        return jnp.minimum(lab, jnp.min(neigh, axis=1))
+
+    labels = jax.lax.fori_loop(0, max_sweeps, sweep, labels)
+
+    # border points: nearest core point within eps
+    d2_core = jnp.where(within & core[None, :], d2, jnp.inf)
+    nearest = jnp.argmin(d2_core, axis=1)
+    has_core = jnp.any(within & core[None, :], axis=1)
+    border_lab = jnp.where(has_core, labels[nearest], -1)
+    out = jnp.where(core, labels, border_lab)
+    return jnp.where(out == n, -1, out)
+
+
+def relabel_compact(labels):
+    """Map labels to 0..k-1 (noise stays -1); returns (labels, k)."""
+    labels = jnp.asarray(labels)
+    uniq = jnp.unique(jnp.where(labels < 0, jnp.max(labels) + 1, labels),
+                      size=labels.shape[0], fill_value=-2)
+    # jnp.unique with padding is awkward under jit; do it in numpy instead.
+    import numpy as np
+    lab = np.asarray(labels)
+    uniq = np.unique(lab[lab >= 0])
+    remap = {int(u): i for i, u in enumerate(uniq)}
+    out = np.array([remap.get(int(v), -1) for v in lab], dtype=np.int32)
+    return out, len(uniq)

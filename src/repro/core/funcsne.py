@@ -1,0 +1,558 @@
+"""FUnc-SNE: fast, unconstrained neighbour embedding (paper Sec. 3).
+
+One ``funcsne_step`` fuses, in a single fixed-shape XLA/TPU program:
+
+  1. stochastic HD neighbour refinement (prob 0.05 + 0.95 E[N_new/N]),
+     candidates drawn from HD/LD neighbours-of-neighbours + cross-space
+     + uniform probes (the joint iterative KNN),
+  2. flag-driven perplexity (sigma_i) refresh with warm restart,
+  3. systematic LD neighbour refinement,
+  4. variable-tail forces: attraction over the HD set, repulsion over the
+     LD set (the paper's novel middle term of Eq. 6) + negative-sampling
+     far field with an EMA'd Z estimator,
+  5. t-SNE-style gains/momentum update of the embedding.
+
+Hyperparameters that the paper exposes interactively (alpha, perplexity,
+attraction/repulsion ratio, lr, exaggeration) are *traced scalars*
+(``HParams``) so changing them never recompiles -- the headless equivalent
+of the paper's instant-GUI-feedback property.
+
+Distribution (DESIGN.md Sec. 3/5): inside ``shard_map`` the embedding state
+is replicated; each device owns a contiguous row slice per phase
+(KNN phases: the ``points`` axes; force phase: points x feat axes) and the
+slices are reassembled with tiled all-gathers / a single force psum.  The HD
+feature dimension is sharded over the ``feat`` axis and squared distances
+are psum'd -- tensor parallelism for the NE.  Passing ``ctx=AxisCtx()``
+(no axes) yields the single-device program, so both paths share this code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import affinities
+from repro.core import knn as knn_lib
+from repro.core.knn import SENTINEL
+from repro.kernels.ne_forces.ops import ne_forces
+from repro.kernels.pairwise_sqdist.ops import pairwise_sqdist
+
+
+# --------------------------------------------------------------------------
+# Configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class FuncSNEConfig:
+    """Static configuration (hashable -> jit static arg)."""
+    n_points: int                 # capacity; dynamic datasets use `active`
+    dim_hd: int
+    dim_ld: int = 2
+    k_hd: int = 32
+    k_ld: int = 16
+    # HD candidate sources per iteration (paper Sec. 3)
+    c_hd_non: int = 4             # HD neighbours-of-neighbours
+    c_hd_ld: int = 2              # LD neighbours proposed cross-space
+    c_hd_ld_non: int = 2          # LD neighbours-of-neighbours cross-space
+    c_hd_rand: int = 2            # uniform probes
+    c_hd_rev: int = 0             # reverse edges (off by default; NND uses it)
+    # LD candidate sources
+    c_ld_non: int = 4
+    c_ld_hd: int = 2              # HD neighbours as stable LD candidates
+    c_ld_rand: int = 2
+    n_negatives: int = 16
+    sigma_refresh_every: int = 10
+    min_refresh_prob: float = 0.05
+    ema_decay: float = 0.9        # for E[N_new / N]
+    z_ema_decay: float = 0.9
+    backend: str = "auto"         # kernels backend
+
+    @property
+    def c_hd(self) -> int:
+        return (self.c_hd_non + self.c_hd_ld + self.c_hd_ld_non
+                + self.c_hd_rand + self.c_hd_rev)
+
+    @property
+    def c_ld(self) -> int:
+        return self.c_ld_non + self.c_ld_hd + self.c_ld_rand
+
+
+class HParams(NamedTuple):
+    """Traced hyperparameters -- change any of these without recompiling."""
+    alpha: Any
+    perplexity: Any
+    lr: Any
+    momentum: Any
+    attraction: Any
+    repulsion: Any
+    exaggeration: Any
+
+
+def default_hparams(n: int, *, alpha=1.0, perplexity=30.0, lr=None,
+                    momentum=0.8, attraction=1.0, repulsion=1.0,
+                    exaggeration=1.0) -> HParams:
+    if lr is None:
+        lr = max(50.0, n / 12.0)   # openTSNE-style default
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    return HParams(f32(alpha), f32(perplexity), f32(lr), f32(momentum),
+                   f32(attraction), f32(repulsion), f32(exaggeration))
+
+
+class AxisCtx(NamedTuple):
+    """Mesh axis names; all None -> single-device execution."""
+    points: Optional[tuple] = None    # axes sharding KNN-phase rows
+    feat: Optional[str] = None        # axis sharding the HD feature dim
+
+    @property
+    def all_rows(self) -> Optional[tuple]:
+        if self.points is None:
+            return None
+        return self.points + ((self.feat,) if self.feat else ())
+
+
+class FuncSNEState(NamedTuple):
+    Y: Any          # (N, d_ld)
+    vel: Any        # (N, d_ld)
+    gains: Any      # (N, d_ld)
+    hd_idx: Any     # (N, k_hd) int32, sorted by hd_d ascending
+    hd_d: Any       # (N, k_hd) f32 squared HD distances
+    ld_idx: Any     # (N, k_ld) int32
+    ld_d: Any       # (N, k_ld) f32 squared LD distances
+    beta: Any       # (N,) 1/(2 sigma_i^2)
+    new_flag: Any   # (N,) bool -- new HD neighbour since last sigma refresh
+    active: Any     # (N,) bool -- dynamic-dataset membership
+    ema_new_frac: Any   # () f32
+    zhat: Any       # () f32 EMA'd Z estimator
+    step: Any       # () i32
+    rng: Any        # PRNG key
+
+
+# --------------------------------------------------------------------------
+# Helpers
+
+
+def _phase_rows(n: int, axes):
+    """(start, n_local) of this device's contiguous row slice for a phase."""
+    if axes is None:
+        return jnp.int32(0), n
+    n_shards = jax.lax.psum(1, axes)
+    idx = jax.lax.axis_index(axes)
+    n_local = n // n_shards
+    return (idx * n_local).astype(jnp.int32), n_local
+
+
+def _gather_rows(full, axes):
+    """Reassemble per-device row slices into the full array."""
+    if axes is None:
+        return full
+    return jax.lax.all_gather(full, axes, axis=0, tiled=True)
+
+
+def _take(arr, idx):
+    """Gather rows with SENTINEL-safe clipping."""
+    return arr[jnp.clip(idx, 0, arr.shape[0] - 1)]
+
+
+def _row_sqdist(X, ids, cand, ctx: AxisCtx, backend: str):
+    """Squared HD distances rows->candidates, psum over the feature axis."""
+    q = X[ids]
+    c = _take(X, cand)
+    d = pairwise_sqdist(q, c, backend=backend)
+    if ctx.feat is not None:
+        d = jax.lax.psum(d, ctx.feat)
+    return d
+
+
+# --------------------------------------------------------------------------
+# Phase 1: HD neighbour refinement
+
+
+def _hd_refine(cfg: FuncSNEConfig, st: FuncSNEState, X, rng, ctx: AxisCtx):
+    n = cfg.n_points
+    start, n_loc = _phase_rows(n, ctx.points)
+    ids = start + jnp.arange(n_loc, dtype=jnp.int32)
+    hd_l = jax.lax.dynamic_slice_in_dim(st.hd_idx, start, n_loc)
+    hd_d_l = jax.lax.dynamic_slice_in_dim(st.hd_d, start, n_loc)
+    ld_l = jax.lax.dynamic_slice_in_dim(st.ld_idx, start, n_loc)
+
+    if ctx.points is not None:
+        rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.points))
+    r = jax.random.split(rng, 5)
+    parts = []
+    if cfg.c_hd_non:
+        parts.append(knn_lib.sample_hops(r[0], hd_l, st.hd_idx, ids,
+                                         cfg.c_hd_non))
+    if cfg.c_hd_ld:
+        parts.append(knn_lib.sample_direct(r[1], ld_l, cfg.c_hd_ld))
+    if cfg.c_hd_ld_non:
+        parts.append(knn_lib.sample_hops(r[2], ld_l, st.ld_idx, ids,
+                                         cfg.c_hd_ld_non))
+    if cfg.c_hd_rand:
+        parts.append(knn_lib.sample_uniform(r[3], n_loc, n, cfg.c_hd_rand))
+    if cfg.c_hd_rev:
+        rev = knn_lib.reverse_neighbors(st.hd_idx, n, cfg.c_hd_rev, r[4])
+        parts.append(jax.lax.dynamic_slice_in_dim(rev, start, n_loc))
+    cand = jnp.concatenate(parts, axis=1)
+
+    valid = knn_lib.dedup_candidates(ids, hd_l, cand)
+    valid &= _take(st.active, cand)
+    cand_d = _row_sqdist(X, ids, cand, ctx, cfg.backend)
+    new_idx, new_d, improved = knn_lib.merge_knn(hd_l, hd_d_l, cand, cand_d,
+                                                 valid)
+
+    hd_idx = _gather_rows(new_idx, ctx.points)
+    if ctx.points is None:
+        hd_d = new_d
+    else:
+        # §Perf H11: squared HD distances cross the wire in bf16 (merge
+        # thresholds and the sigma solve tolerate ~0.4% relative error)
+        hd_d = _gather_rows(new_d.astype(jnp.bfloat16), ctx.points)
+        hd_d = hd_d.astype(jnp.float32)
+    improved_f = _gather_rows(improved, ctx.points)
+    new_flag = st.new_flag | improved_f
+    n_act = jnp.maximum(jnp.sum(st.active.astype(jnp.float32)), 1.0)
+    frac = jnp.sum((improved_f & st.active).astype(jnp.float32)) / n_act
+    ema = cfg.ema_decay * st.ema_new_frac + (1.0 - cfg.ema_decay) * frac
+    return st._replace(hd_idx=hd_idx, hd_d=hd_d, new_flag=new_flag,
+                       ema_new_frac=ema)
+
+
+# --------------------------------------------------------------------------
+# Phase 2: sigma (beta) refresh for flagged rows
+
+
+def _sigma_refresh(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams,
+                   ctx: AxisCtx):
+    start, n_loc = _phase_rows(cfg.n_points, ctx.all_rows)
+    hd_d_l = jax.lax.dynamic_slice_in_dim(st.hd_d, start, n_loc)
+    hd_i_l = jax.lax.dynamic_slice_in_dim(st.hd_idx, start, n_loc)
+    beta_l = jax.lax.dynamic_slice_in_dim(st.beta, start, n_loc)
+    flag_l = jax.lax.dynamic_slice_in_dim(st.new_flag, start, n_loc)
+    valid = jnp.isfinite(hd_d_l) & (hd_i_l != SENTINEL)
+    valid &= _take(st.active, hd_i_l)
+    solved = affinities.solve_beta(hd_d_l, hp.perplexity, valid=valid,
+                                   beta0=beta_l, n_iter=24)
+    beta_l = jnp.where(flag_l, solved, beta_l)
+    beta = _gather_rows(beta_l, ctx.all_rows)
+    n = cfg.n_points
+    cleared = jnp.zeros((n,), bool)
+    return st._replace(beta=beta, new_flag=cleared)
+
+
+# --------------------------------------------------------------------------
+# Phase 3: LD neighbour refinement (every iteration)
+
+
+def _ld_refine(cfg: FuncSNEConfig, st: FuncSNEState, rng, ctx: AxisCtx):
+    n = cfg.n_points
+    start, n_loc = _phase_rows(n, ctx.all_rows)
+    ids = start + jnp.arange(n_loc, dtype=jnp.int32)
+    ld_l = jax.lax.dynamic_slice_in_dim(st.ld_idx, start, n_loc)
+    hd_l = jax.lax.dynamic_slice_in_dim(st.hd_idx, start, n_loc)
+
+    if ctx.all_rows is not None:
+        rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.all_rows))
+    r = jax.random.split(rng, 3)
+    parts = []
+    if cfg.c_ld_non:
+        parts.append(knn_lib.sample_hops(r[0], ld_l, st.ld_idx, ids,
+                                         cfg.c_ld_non))
+    if cfg.c_ld_hd:
+        # HD neighbours: stable LD candidates unaffected by embedding motion
+        parts.append(knn_lib.sample_direct(r[1], hd_l, cfg.c_ld_hd))
+    if cfg.c_ld_rand:
+        parts.append(knn_lib.sample_uniform(r[2], n_loc, n, cfg.c_ld_rand))
+    cand = jnp.concatenate(parts, axis=1)
+
+    valid = knn_lib.dedup_candidates(ids, ld_l, cand)
+    valid &= _take(st.active, cand)
+
+    y_l = st.Y[ids]
+    # refresh stored distances (embedding moved since the last merge)
+    cur_nbr = _take(st.Y, ld_l)
+    cur_valid = (ld_l != SENTINEL) & _take(st.active, ld_l)
+    cur_d = jnp.sum((cur_nbr - y_l[:, None, :]) ** 2, axis=-1)
+    cur_d = jnp.where(cur_valid, cur_d, jnp.inf)
+    cand_nbr = _take(st.Y, cand)
+    cand_d = jnp.sum((cand_nbr - y_l[:, None, :]) ** 2, axis=-1)
+
+    new_idx, new_d, _ = knn_lib.merge_knn(ld_l, cur_d, cand, cand_d, valid)
+    ld_idx = _gather_rows(new_idx, ctx.all_rows)
+    if ctx.all_rows is None:
+        ld_d = new_d
+    else:
+        # §Perf H10b: ld_d is re-derived from Y at the next refinement
+        # (the embedding moves every step), so gathering it across chips
+        # is pure wire waste; keep a local placeholder instead.
+        ld_d = jnp.zeros_like(st.ld_d)
+    return st._replace(ld_idx=ld_idx, ld_d=ld_d)
+
+
+# --------------------------------------------------------------------------
+# Phase 4: forces + embedding update
+
+
+def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
+                   ctx: AxisCtx):
+    n, d = cfg.n_points, cfg.dim_ld
+    start, n_loc = _phase_rows(n, ctx.all_rows)
+    ids = start + jnp.arange(n_loc, dtype=jnp.int32)
+    if ctx.all_rows is not None:
+        rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.all_rows))
+
+    hd_i = jax.lax.dynamic_slice_in_dim(st.hd_idx, start, n_loc)
+    hd_d = jax.lax.dynamic_slice_in_dim(st.hd_d, start, n_loc)
+    ld_i = jax.lax.dynamic_slice_in_dim(st.ld_idx, start, n_loc)
+    beta_l = jax.lax.dynamic_slice_in_dim(st.beta, start, n_loc)
+    act_l = jax.lax.dynamic_slice_in_dim(st.active, start, n_loc)
+    y_l = st.Y[ids]
+    n_act = jnp.maximum(jnp.sum(st.active.astype(jnp.float32)), 2.0)
+
+    # ---- attraction over the HD set:  coef = p_{j|i} / (2N)  (Eq. 1)
+    hd_valid = jnp.isfinite(hd_d) & (hd_i != SENTINEL)
+    hd_valid &= _take(st.active, hd_i)
+    p = affinities.p_rows(hd_d, beta_l, valid=hd_valid)
+    coef_a = jnp.where(hd_valid & act_l[:, None], p, 0.0) / (2.0 * n_act)
+    nbr_a = _take(st.Y, hd_i)
+    agg_a, edge_a, _ = ne_forces(y_l, nbr_a, coef_a, hp.alpha,
+                                 mode="attraction", backend=cfg.backend)
+
+    # ---- repulsion over the LD set (paper's novel middle term of Eq. 6)
+    # coef 0.5: each directed edge acts on both endpoints below, so mutual
+    # LD pairs would otherwise be double-counted.
+    ld_valid = (ld_i != SENTINEL) & _take(st.active, ld_i)
+    coef_r = 0.5 * (ld_valid & act_l[:, None]).astype(jnp.float32)
+    nbr_r = _take(st.Y, ld_i)
+    agg_r, edge_r, wsum_r = ne_forces(y_l, nbr_r, coef_r, hp.alpha,
+                                      mode="repulsion", backend=cfg.backend)
+
+    # ---- far-field via negative sampling (third term of Eq. 6)
+    neg = knn_lib.sample_uniform(rng, n_loc, n, cfg.n_negatives)
+    neg = jnp.where(neg == ids[:, None], (neg + 1) % n, neg)
+    coef_n = (_take(st.active, neg) & act_l[:, None]).astype(jnp.float32)
+    agg_n, _, wsum_n = ne_forces(y_l, _take(st.Y, neg), coef_n, hp.alpha,
+                                 mode="repulsion", backend=cfg.backend)
+    scale_neg = jnp.maximum(n_act - 1.0 - cfg.k_ld, 1.0) / cfg.n_negatives
+
+    # ---- Z estimator:  Z ~= sum_i [ sum_{j in LD_i} w_ij + scale * mean_neg ]
+    # (x2 undoes the 0.5 symmetrisation coefficient baked into coef_r)
+    z_local = 2.0 * jnp.sum(wsum_r) + scale_neg * jnp.sum(wsum_n)
+    z_est = (jax.lax.psum(z_local, ctx.all_rows)
+             if ctx.all_rows is not None else z_local)
+    z_est = jnp.maximum(z_est, 1e-8)
+    zhat = jnp.where(st.step == 0, z_est,
+                     cfg.z_ema_decay * st.zhat
+                     + (1.0 - cfg.z_ema_decay) * z_est)
+
+    # ---- assemble the displacement field (one (N, d) buffer + one psum)
+    attr_s = hp.attraction * hp.exaggeration
+    rep_s = hp.repulsion / zhat
+    buf = jnp.zeros((n, d), jnp.float32)
+    buf = buf.at[ids].add(attr_s * agg_a + rep_s * (agg_r + scale_neg * agg_n))
+    # scatter-free symmetrisation: each directed edge acts on both endpoints
+    tgt_a = jnp.clip(hd_i, 0, n - 1).reshape(-1)
+    buf = buf.at[tgt_a].add(-(attr_s * edge_a).reshape(-1, d))
+    tgt_r = jnp.clip(ld_i, 0, n - 1).reshape(-1)
+    buf = buf.at[tgt_r].add(-(rep_s * edge_r).reshape(-1, d))
+    if ctx.all_rows is not None:
+        # §Perf H10a: accumulate locally in f32, cross the wire in bf16
+        # (the far field is negative-sampled: force noise >> bf16 error)
+        buf = jax.lax.psum(buf.astype(jnp.bfloat16), ctx.all_rows)
+        buf = buf.astype(jnp.float32)
+    dY = 4.0 * buf
+
+    # ---- t-SNE gains + momentum (replicated update)
+    act = st.active[:, None]
+    same = jnp.sign(dY) == jnp.sign(st.vel)
+    gains = jnp.where(same, st.gains + 0.2, st.gains * 0.8)
+    # upper clip: with stochastic (negative-sampled) forces, unbounded gains
+    # turn sampling noise into diffusive expansion of the embedding
+    gains = jnp.clip(gains, 0.01, 10.0)
+    vel = hp.momentum * st.vel + hp.lr * gains * dY
+    vel = jnp.where(act, vel, 0.0)
+    Y = st.Y + vel
+    return st._replace(Y=Y, vel=vel, gains=jnp.where(act, gains, st.gains),
+                       zhat=zhat)
+
+
+# --------------------------------------------------------------------------
+# Full step
+
+
+def funcsne_step(cfg: FuncSNEConfig, st: FuncSNEState, X, hp: HParams,
+                 ctx: AxisCtx = AxisCtx()) -> FuncSNEState:
+    """One fused FUnc-SNE iteration (see module docstring)."""
+    rng = jax.random.fold_in(st.rng, st.step)
+    r_gate, r_hd, r_ld, r_force = jax.random.split(rng, 4)
+
+    # stochastic HD refinement: p = 0.05 + 0.95 E[N_new/N]  (paper Sec. 3)
+    p_ref = cfg.min_refresh_prob + (1.0 - cfg.min_refresh_prob) \
+        * st.ema_new_frac
+    do_hd = jax.random.bernoulli(r_gate, jnp.clip(p_ref, 0.0, 1.0))
+    st = jax.lax.cond(do_hd,
+                      lambda s: _hd_refine(cfg, s, X, r_hd, ctx),
+                      lambda s: s, st)
+
+    do_sigma = (st.step % cfg.sigma_refresh_every == 0) \
+        & jnp.any(st.new_flag)
+    st = jax.lax.cond(do_sigma,
+                      lambda s: _sigma_refresh(cfg, s, hp, ctx),
+                      lambda s: s, st)
+
+    st = _ld_refine(cfg, st, r_ld, ctx)
+    st = _forces_update(cfg, st, hp, r_force, ctx)
+    return st._replace(step=st.step + 1)
+
+
+# --------------------------------------------------------------------------
+# Initialisation & drivers
+
+
+def pca_directions(X, d: int, n_iter: int = 24, rng=None):
+    """Top-d PCA directions via subspace (power) iteration (no scipy)."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    Xc = X - jnp.mean(X, axis=0, keepdims=True)
+    W = jax.random.normal(rng, (X.shape[1], d), X.dtype)
+
+    def body(_, W):
+        W = Xc.T @ (Xc @ W)
+        q, _ = jnp.linalg.qr(W)
+        return q
+
+    return jax.lax.fori_loop(0, n_iter, body, jnp.linalg.qr(W)[0])
+
+
+def init_state(rng, X, cfg: FuncSNEConfig, *, init: str = "pca",
+               active=None, Y0=None) -> FuncSNEState:
+    n, d = cfg.n_points, cfg.dim_ld
+    assert X.shape == (n, cfg.dim_hd), (X.shape, cfg)
+    r_y, r_hd, r_ld, r_state = jax.random.split(rng, 4)
+    if Y0 is not None:
+        Y = jnp.asarray(Y0, jnp.float32)
+    elif init == "pca":
+        W = pca_directions(X, d, rng=r_y)
+        Y = (X - jnp.mean(X, axis=0)) @ W
+        Y = Y / jnp.maximum(jnp.std(Y), 1e-8) * 1e-2
+    else:
+        Y = jax.random.normal(r_y, (n, d)) * 1e-2
+    if active is None:
+        active = jnp.ones((n,), bool)
+
+    hd_idx = knn_lib.init_knn_idx(r_hd, n, n, cfg.k_hd)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    hd_d = pairwise_sqdist(X, X[hd_idx], backend=cfg.backend)
+    hd_d = jnp.where(active[hd_idx] & active[:, None], hd_d, jnp.inf)
+    order = jnp.argsort(hd_d, axis=1)
+    hd_idx = jnp.take_along_axis(hd_idx, order, axis=1)
+    hd_d = jnp.take_along_axis(hd_d, order, axis=1)
+
+    ld_idx = knn_lib.init_knn_idx(r_ld, n, n, cfg.k_ld)
+    ld_d = jnp.sum((Y[:, None, :] - Y[ld_idx]) ** 2, axis=-1)
+    ld_d = jnp.where(active[ld_idx] & active[:, None], ld_d, jnp.inf)
+
+    beta = affinities.solve_beta(hd_d, 30.0, n_iter=24)
+    del ids
+    return FuncSNEState(
+        Y=Y.astype(jnp.float32), vel=jnp.zeros((n, d), jnp.float32),
+        gains=jnp.ones((n, d), jnp.float32),
+        hd_idx=hd_idx.astype(jnp.int32), hd_d=hd_d,
+        ld_idx=ld_idx.astype(jnp.int32), ld_d=ld_d,
+        beta=beta, new_flag=jnp.ones((n,), bool), active=active,
+        ema_new_frac=jnp.float32(1.0), zhat=jnp.float32(1.0),
+        step=jnp.int32(0), rng=r_state)
+
+
+def make_step(cfg: FuncSNEConfig):
+    """Jitted single-device step; state is donated."""
+    return jax.jit(functools.partial(funcsne_step, cfg), donate_argnums=(0,))
+
+
+def make_distributed_step(cfg: FuncSNEConfig, mesh, *,
+                          points_axes=("data",), feat_axis="model"):
+    """shard_map'd step for a production mesh (see module docstring)."""
+    ctx = AxisCtx(points=tuple(points_axes), feat=feat_axis)
+
+    def step(st, X, hp):
+        return funcsne_step(cfg, st, X, hp, ctx)
+
+    state_specs = FuncSNEState(*([P()] * len(FuncSNEState._fields)))
+    fn = jax.shard_map(step, mesh=mesh,
+                       in_specs=(state_specs, P(None, feat_axis),
+                                 HParams(*([P()] * len(HParams._fields)))),
+                       out_specs=state_specs, check_vma=False)
+    return jax.jit(fn, donate_argnums=(0,)), ctx
+
+
+def rescale_embedding(st: FuncSNEState, factor: float = 0.01):
+    """The paper's 'implosion button': rescale Y so gradients matter again."""
+    return st._replace(Y=st.Y * factor, vel=st.vel * 0.0)
+
+
+def add_points(st: FuncSNEState, ids, rng) -> FuncSNEState:
+    """Activate rows (dynamic datasets). Caller updates the X buffer first;
+    HD distances refresh lazily through the iterative KNN (flags set)."""
+    ids = jnp.asarray(ids, jnp.int32)
+    n = st.active.shape[0]
+    active = st.active.at[ids].set(True)
+    fresh = (ids[:, None] + 1 + knn_lib.init_knn_idx(
+        rng, ids.shape[0], n - 1, st.hd_idx.shape[1])) % n
+    hd_idx = st.hd_idx.at[ids].set(fresh.astype(jnp.int32))
+    hd_d = st.hd_d.at[ids].set(jnp.inf)
+    new_flag = st.new_flag.at[ids].set(True)
+    return st._replace(active=active, hd_idx=hd_idx, hd_d=hd_d,
+                       new_flag=new_flag)
+
+
+def remove_points(st: FuncSNEState, ids) -> FuncSNEState:
+    ids = jnp.asarray(ids, jnp.int32)
+    return st._replace(active=st.active.at[ids].set(False),
+                       new_flag=st.new_flag.at[ids].set(False))
+
+
+def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
+        hparams: HParams = None,
+        schedule: Callable[[int, int, HParams], HParams] = None,
+        init: str = "pca", snapshot_every: int = 0,
+        callback: Callable[[int, FuncSNEState], None] = None):
+    """End-to-end driver. Returns (state, snapshots)."""
+    X = jnp.asarray(X, jnp.float32)
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    if cfg is None:
+        cfg = FuncSNEConfig(n_points=X.shape[0], dim_hd=X.shape[1])
+    if hparams is None:
+        hparams = default_hparams(cfg.n_points)
+    if schedule is None:
+        schedule = default_schedule
+    st = init_state(rng, X, cfg, init=init)
+    step = make_step(cfg)
+    snapshots = []
+    for it in range(n_iter):
+        hp = schedule(it, n_iter, hparams)
+        st = step(st, X, hp)
+        if snapshot_every and (it + 1) % snapshot_every == 0:
+            snapshots.append(jax.device_get(st.Y))
+        if callback is not None:
+            callback(it, st)
+    return st, snapshots
+
+
+def default_schedule(it: int, n_iter: int, hp: HParams) -> HParams:
+    """Early exaggeration, then a linear lr decay (UMAP-style).
+
+    The paper runs a *continual* optimisation where the user counteracts the
+    ever-expanding-embedding regime interactively (attraction ratio /
+    'implosion' button).  For a batch ``fit`` the equivalent is annealing the
+    learning rate so negative-sampling noise stops diffusing the layout.
+    """
+    ee_until = max(1, n_iter // 4)
+    ex = jnp.where(it < ee_until, 12.0, 1.0) * hp.exaggeration
+    mom = jnp.where(it < ee_until, 0.5, hp.momentum)
+    frac = max(0.0, (it - ee_until) / max(1, n_iter - ee_until))
+    lr = hp.lr * (1.0 - 0.9 * frac)
+    return hp._replace(exaggeration=ex, momentum=mom, lr=lr)

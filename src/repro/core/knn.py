@@ -1,0 +1,142 @@
+"""Iterative joint KNN refinement (the paper's novel ANN subroutine).
+
+Neighbour sets are fixed-width sorted arrays (idx, d2) of shape (n, K),
+ascending in d2; invalid slots hold (SENTINEL, +inf).  Each iteration
+generates a fixed number of candidates per point from several *sources*
+(paper Sec. 3):
+
+  - neighbours-of-neighbours within the same space (NND-style local join),
+  - cross-space: LD neighbours (and their neighbours) proposed as HD
+    candidates and vice versa -- this is the positive-feedback-loop channel,
+  - uniform random probes (escape local minima; paper Fig. 7 'Disjointed'),
+  - optionally reverse edges (Dong et al.'s local join; used by the NND
+    baseline, off by default for FUnc-SNE).
+
+All shapes are static -> one fused XLA/TPU program per iteration; the GPU
+paper's ragged atomically-updated lists become a dense top-k merge.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.iinfo(jnp.int32).max  # invalid-slot index marker
+
+
+def init_knn_idx(rng, n_rows, n_total, k, row_offset: int = 0):
+    """Random initial neighbour sets (paper: 'randomly initialised').
+
+    Rows are (random base + 0..k-1) mod n: distinct within a row by
+    construction (duplicate entries would double-count forces and violate
+    the merge invariants); diversity comes from the first refinements.
+    """
+    assert k <= n_total - 1, (k, n_total)
+    base = jax.random.randint(rng, (n_rows, 1), 0, n_total, dtype=jnp.int32)
+    rows = row_offset + jnp.arange(n_rows, dtype=jnp.int32)[:, None]
+    # offsets in [1, n_total-1]: distinct and never 0 (no self-loops)
+    offs = 1 + (base + jnp.arange(k, dtype=jnp.int32)[None, :]) \
+        % (n_total - 1)
+    return ((rows + offs) % n_total).astype(jnp.int32)
+
+
+def sample_hops(rng, first_idx, second_idx, rows, n_samples):
+    """Two-hop candidates: second_idx[first_idx[i, a], b] for random (a, b).
+
+    first_idx: (n, K1) rows for the local points; second_idx: (N, K2) global
+    table (may equal first_idx's global source).  Returns (n, n_samples).
+    """
+    n, k1 = first_idx.shape
+    k2 = second_idx.shape[1]
+    ra, rb = jax.random.split(rng)
+    a = jax.random.randint(ra, (n, n_samples), 0, k1)
+    b = jax.random.randint(rb, (n, n_samples), 0, k2)
+    mid = jnp.take_along_axis(first_idx, a, axis=1)          # (n, s)
+    mid = jnp.where(mid == SENTINEL, rows[:, None] % second_idx.shape[0], mid)
+    cand = second_idx[jnp.clip(mid, 0, second_idx.shape[0] - 1)]  # (n, s, K2)
+    return jnp.take_along_axis(cand, b[..., None], axis=2)[..., 0]
+
+
+def sample_direct(rng, idx, n_samples):
+    """One-hop candidates: random entries of the point's own list."""
+    n, k = idx.shape
+    a = jax.random.randint(rng, (n, n_samples), 0, k)
+    return jnp.take_along_axis(idx, a, axis=1)
+
+
+def sample_uniform(rng, n, n_total, n_samples):
+    return jax.random.randint(rng, (n, n_samples), 0, n_total,
+                              dtype=jnp.int32)
+
+
+def reverse_neighbors(idx, n_total, r, fill_rng):
+    """Sampled reverse edges: up to ``r`` points that list i as a neighbour.
+
+    Built with one argsort over the E = n*K directed edges (TPU-friendly
+    replacement for the GPU scatter-append).  Rows with fewer than r reverse
+    edges are padded with uniform random points.
+    """
+    n, k = idx.shape
+    tgt = idx.reshape(-1)
+    src = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    order = jnp.argsort(tgt)
+    tgt_s = tgt[order]
+    src_s = src[order]
+    starts = jnp.searchsorted(tgt_s, jnp.arange(n_total, dtype=jnp.int32))
+    counts = jnp.diff(jnp.append(starts, tgt_s.shape[0]))
+    pos = starts[:, None] + jnp.arange(r)[None, :]
+    valid = jnp.arange(r)[None, :] < counts[:, None]
+    gathered = src_s[jnp.clip(pos, 0, src_s.shape[0] - 1)]
+    rand = sample_uniform(fill_rng, n_total, n_total, r)
+    return jnp.where(valid, gathered, rand)
+
+
+def dedup_candidates(rows, cur_idx, cand_idx):
+    """Mark duplicate candidates invalid.
+
+    A candidate is invalid if it equals the row's own id, an existing
+    neighbour, or an earlier candidate in the same row.  Returns a bool mask.
+    """
+    self_dup = cand_idx == rows[:, None]
+    in_cur = jnp.any(cand_idx[:, :, None] == cur_idx[:, None, :], axis=-1)
+    earlier = cand_idx[:, :, None] == cand_idx[:, None, :]
+    c = cand_idx.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    within = jnp.any(earlier & tri[None], axis=-1)
+    sentinel = cand_idx == SENTINEL
+    return ~(self_dup | in_cur | within | sentinel)
+
+
+def merge_knn(cur_idx, cur_d, cand_idx, cand_d, valid_mask):
+    """Merge candidates into the sorted K-NN arrays.
+
+    Returns (idx, d, row_improved).  row_improved is True iff at least one
+    candidate was admitted (drives the paper's refresh probability and the
+    sigma refresh flags).
+    """
+    k = cur_idx.shape[1]
+    cand_d = jnp.where(valid_mask, cand_d, jnp.inf)
+    all_idx = jnp.concatenate([cur_idx, cand_idx], axis=1)
+    all_d = jnp.concatenate([cur_d, cand_d], axis=1)
+    neg_top, pos = jax.lax.top_k(-all_d, k)       # k smallest distances
+    new_d = -neg_top
+    new_idx = jnp.take_along_axis(all_idx, pos, axis=1)
+    worst = cur_d[:, -1]
+    improved = jnp.any(cand_d < worst[:, None], axis=1)
+    return new_idx, new_d, improved
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def exact_knn(X, k: int, active=None):
+    """O(N^2) exact KNN (ground truth for tests/benchmarks; small N only)."""
+    n = X.shape[0]
+    n2 = jnp.sum(X * X, axis=1)
+    d2 = n2[:, None] + n2[None, :] - 2.0 * (X @ X.T)
+    d2 = jnp.maximum(d2, 0.0)
+    d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)  # not eye*inf: 0*inf=NaN
+    if active is not None:
+        d2 = jnp.where(active[None, :], d2, jnp.inf)
+    neg_top, idx = jax.lax.top_k(-d2, k)
+    return idx.astype(jnp.int32), -neg_top

@@ -1,0 +1,55 @@
+"""Variable-tail LD similarity kernel (paper Eq. 4) and exact losses.
+
+w_ij = (1 + ||y_i - y_j||^2 / alpha)^(-alpha),   alpha in (0, inf)
+  alpha = 1   -> Student-t with 1 dof (t-SNE)
+  alpha < 1   -> heavier tails (finer cluster fragmentation)
+  alpha -> inf -> Gaussian limit (SNE)
+
+Closed forms (used by kernels & tests):
+  w^(1/alpha)     = (1 + d2/alpha)^(-1)
+  w^(1+1/alpha)   = (1 + d2/alpha)^(-(alpha+1))
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def w_tail(d2, alpha):
+    """Unnormalised LD similarity w(d2; alpha)."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    return jnp.exp(-alpha * jnp.log1p(d2 / alpha))
+
+
+def w_pow_inv_alpha(d2, alpha):
+    """w^(1/alpha) = 1 / (1 + d2/alpha)."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    return 1.0 / (1.0 + d2 / alpha)
+
+
+def w_pow_one_plus_inv_alpha(d2, alpha):
+    """w^(1+1/alpha) = (1 + d2/alpha)^(-(alpha+1))."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    return jnp.exp(-(alpha + 1.0) * jnp.log1p(d2 / alpha))
+
+
+def pairwise_sqdists_full(Y):
+    """Dense (N, N) squared distances (exact baselines / small N only)."""
+    n2 = jnp.sum(Y * Y, axis=1)
+    d2 = n2[:, None] + n2[None, :] - 2.0 * (Y @ Y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def q_matrix(Y, alpha):
+    """Dense normalised LD similarities q_ij (Eq. 4); q_ii = 0."""
+    d2 = pairwise_sqdists_full(Y)
+    w = w_tail(d2, alpha)
+    w = w * (1.0 - jnp.eye(Y.shape[0]))
+    return w / jnp.sum(w), w
+
+
+def kl_loss(P, Y, alpha, eps: float = 1e-12):
+    """Exact KL(P || Q) with the variable-tail kernel (validation oracle)."""
+    q, _ = q_matrix(Y, alpha)
+    mask = P > 0
+    ratio = jnp.where(mask, P / jnp.maximum(q, eps), 1.0)
+    return jnp.sum(jnp.where(mask, P * jnp.log(ratio), 0.0))

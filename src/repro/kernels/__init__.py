@@ -1,0 +1,13 @@
+"""TPU Pallas kernels for the FUnc-SNE framework.
+
+Each kernel package provides:
+  kernel.py -- ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    -- jit'd public wrapper with backend selection
+               ('pallas' on TPU, 'interpret' for CPU validation, 'xla' pure-jnp)
+  ref.py    -- pure-jnp oracle used by tests and as the XLA fallback
+
+Kernels (the compute hot-spots the paper optimises on GPU, re-tiled for TPU):
+  pairwise_sqdist  -- blocked ||q - c||^2 for KNN candidate scoring (HD hot spot)
+  ne_forces        -- fused variable-tail attraction/repulsion force evaluation
+  flash_attention  -- causal GQA flash attention (LM prefill hot spot)
+"""

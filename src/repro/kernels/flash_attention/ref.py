@@ -1,0 +1,40 @@
+"""Pure-jnp oracle: causal GQA attention with logit softcap / local window."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale: float | None = None,
+                        softcap: float = 0.0, window: int = 0):
+    """Materialised-softmax causal attention.
+
+    Args:
+      q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0 (GQA).
+      scale: logit scale (default 1/sqrt(D)).
+      softcap: if > 0, logits are soft-capped ``cap * tanh(s / cap)`` (Gemma2).
+      window: if > 0, sliding-window attention over the last ``window``
+        positions (inclusive of self).
+    Returns:
+      (B, Hq, S, D) in q.dtype.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = cols <= rows
+    if window > 0:
+        mask = mask & (cols > rows - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

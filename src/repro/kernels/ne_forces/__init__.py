@@ -1,0 +1,1 @@
+from repro.kernels.ne_forces.ops import ne_forces  # noqa: F401

@@ -1,0 +1,28 @@
+"""Public jit'd wrapper for the fused NE force kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ne_forces.kernel import ne_forces_pallas
+from repro.kernels.ne_forces.ref import ne_forces_ref
+
+
+def _default_backend() -> str:
+    try:
+        platform = jax.devices()[0].platform
+    except Exception:  # pragma: no cover
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "xla"
+
+
+def ne_forces(y, nbr, coef, alpha, *, mode: str, backend: str = "auto"):
+    """Fused variable-tail force evaluation; see ref.py for semantics."""
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "pallas":
+        return ne_forces_pallas(y, nbr, coef, alpha, mode=mode)
+    if backend == "interpret":
+        return ne_forces_pallas(y, nbr, coef, alpha, mode=mode, interpret=True)
+    if backend == "xla":
+        return ne_forces_ref(y, nbr, coef, alpha, mode=mode)
+    raise ValueError(f"unknown backend {backend!r}")

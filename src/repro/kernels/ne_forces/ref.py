@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused variable-tail NE force kernel.
+
+Variable-tail LD kernel (paper Eq. 4):  w(d2) = (1 + d2/alpha)^(-alpha)
+
+Closed forms used throughout (avoid fractional powers of w):
+  w^(1/alpha)       = (1 + d2/alpha)^(-1)
+  w^(1 + 1/alpha)   = (1 + d2/alpha)^(-(alpha+1))
+
+mode='attraction'   (first term of paper Eq. 6, re-distributed per Sec. 3):
+  edge[b,k] = coef[b,k] * w^(1/alpha) * (nbr[b,k] - y[b])     # pull toward nbr
+  wsum[b]   = sum_k coef[b,k] * w^(1/alpha)
+
+mode='repulsion'    (second+third terms; coef carries mask / NS rescale):
+  edge[b,k] = coef[b,k] * w^(1+1/alpha) * (y[b] - nbr[b,k])   # push away
+  wsum[b]   = sum_k coef[b,k] * w          # partial sums for the Z estimator
+
+Returns (agg, edge, wsum): agg[b] = sum_k edge[b,k] is the force on point b;
+edge is kept so the symmetric contribution (-edge) can be scattered to the
+neighbour side outside the kernel (scatter-free symmetrisation, DESIGN.md #3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ne_forces_ref(y, nbr, coef, alpha, *, mode: str):
+    assert mode in ("attraction", "repulsion"), mode
+    y32 = y.astype(jnp.float32)                # (B, d)
+    n32 = nbr.astype(jnp.float32)              # (B, K, d)
+    c32 = coef.astype(jnp.float32)             # (B, K)
+    alpha = jnp.asarray(alpha, jnp.float32)
+
+    delta = n32 - y32[:, None, :]              # (B, K, d)
+    d2 = jnp.sum(delta * delta, axis=-1)       # (B, K)
+    base = 1.0 + d2 / alpha                    # (B, K)
+
+    if mode == "attraction":
+        wexp = 1.0 / base                      # w^(1/alpha)
+        edge = (c32 * wexp)[..., None] * delta
+        wsum = jnp.sum(c32 * wexp, axis=-1)
+    else:
+        wexp = jnp.exp(-(alpha + 1.0) * jnp.log(base))   # w^(1+1/alpha)
+        w = jnp.exp(-alpha * jnp.log(base))              # w
+        edge = (c32 * wexp)[..., None] * (-delta)
+        wsum = jnp.sum(c32 * w, axis=-1)
+    agg = jnp.sum(edge, axis=1)                # (B, d)
+    return agg, edge, wsum

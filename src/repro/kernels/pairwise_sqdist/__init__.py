@@ -1,0 +1,1 @@
+from repro.kernels.pairwise_sqdist.ops import pairwise_sqdist  # noqa: F401

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the pairwise squared-distance kernel.
+
+Backend selection:
+  'pallas'    -- compiled Pallas kernel (TPU runtime)
+  'interpret' -- Pallas interpret mode (CPU validation of the kernel body)
+  'xla'       -- pure-jnp oracle (default on CPU; also the dry-run lowering path)
+  'auto'      -- 'pallas' when a TPU is present, else 'xla'
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pairwise_sqdist.kernel import pairwise_sqdist_pallas
+from repro.kernels.pairwise_sqdist.ref import pairwise_sqdist_ref
+
+
+def _default_backend() -> str:
+    try:
+        platform = jax.devices()[0].platform
+    except Exception:  # pragma: no cover - device init failure
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "xla"
+
+
+def pairwise_sqdist(q, c, *, backend: str = "auto"):
+    """Squared distances between queries (B, M) and candidates (B, C, M)."""
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "pallas":
+        return pairwise_sqdist_pallas(q, c)
+    if backend == "interpret":
+        return pairwise_sqdist_pallas(q, c, interpret=True)
+    if backend == "xla":
+        return pairwise_sqdist_ref(q, c)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the blocked squared-distance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance between each query and its candidates.
+
+    Args:
+      q: (B, M) query points.
+      c: (B, C, M) candidate points gathered per query.
+    Returns:
+      (B, C) float32 squared distances ``||q[b] - c[b, j]||^2``.
+    """
+    q32 = q.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    diff = q32[:, None, :] - c32
+    return jnp.sum(diff * diff, axis=-1)

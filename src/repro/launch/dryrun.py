@@ -1,0 +1,440 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) or (2,16,16) CPU stand-ins),
+  2. eval_shape's params/opt/cache (ShapeDtypeStruct only -- no allocation),
+  3. jits train_step (train shapes) or serve_step (decode shapes) with the
+     full sharding config and ``.lower().compile()``s it,
+  4. records memory_analysis / cost_analysis / per-collective wire bytes /
+     roofline terms to results/dryrun/<arch>__<shape>__<mesh>.json.
+
+The FUnc-SNE production cell ('funcsne-1m': N=2^20 points, M=192, d_ld=32)
+is lowered through the same path via its shard_map'd distributed step.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_arch, list_archs
+from repro.core import funcsne
+from repro.launch import roofline as rl
+from repro.launch.mesh import (batch_axes, make_production_mesh,
+                               sanitize_spec, tree_shardings)
+from repro.launch.steps import (batch_struct, decode_structs, make_model,
+                                make_optimizer, make_serve_step,
+                                make_train_step, params_and_opt_structs)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+FUNCSNE_CELLS = {
+    "embed_1m": dict(n_points=1 << 20, dim_hd=192, dim_ld=32, k_hd=32,
+                     k_ld=16, n_negatives=16),
+}
+
+
+def _spec_bytes(struct, sharding) -> float:
+    n = struct.size * jnp.dtype(struct.dtype).itemsize
+    shards = 1
+    for entry in sharding.spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            shards *= sharding.mesh.shape[a]
+    return n / shards
+
+
+def _tree_bytes_per_chip(structs, shardings) -> float:
+    leaves_s = jax.tree.leaves(structs)
+    leaves_h = jax.tree.leaves(shardings,
+                               is_leaf=lambda x: isinstance(x, NamedSharding))
+    return float(sum(_spec_bytes(s, h) for s, h in zip(leaves_s, leaves_h)))
+
+
+def _memory_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return None
+        return {k: getattr(ma, k) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes") if hasattr(ma, k)}
+    except Exception as e:            # CPU backend may not support it
+        return {"error": repr(e)}
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or k in ("transcendentals",))}
+    except Exception as e:
+        return {"error": repr(e)}
+
+
+def run_lm_cell(arch: str, shape_name: str, multi_pod: bool,
+                save_hlo: bool = False, overrides: dict = None) -> dict:
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    res = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "overrides": overrides or {}}
+
+    if shape.kind == "decode" and shape_name == "long_500k" \
+            and not cfg.supports_long:
+        res["status"] = "skipped"
+        res["reason"] = ("pure full-attention arch; long_500k needs "
+                         "sub-quadratic attention (DESIGN.md Sec. 4)")
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    model = make_model(cfg, mesh, global_batch=shape.global_batch)
+    opt = make_optimizer(cfg)
+    p_struct, o_struct = params_and_opt_structs(cfg, model, opt)
+    p_sh = tree_shardings(mesh, model.param_specs(), p_struct)
+    o_sh = _opt_shardings(mesh, model, o_struct)
+
+    t0 = time.time()
+    if shape.kind in ("train", "prefill"):
+        # prefill shapes are exercised through the fwd+bwd train graph too;
+        # kind='prefill' lowers forward-only loss (no optimiser update).
+        b_struct = batch_struct(cfg, shape.seq_len, shape.global_batch)
+        b_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, sanitize_spec(
+                mesh, P(batch_axes(mesh)), s.shape)), b_struct)
+        if shape.kind == "train":
+            step = make_train_step(model, opt)
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_struct, o_struct, b_struct)
+        else:
+            # inference prefill: forward to next-token logits (the KV-cache
+            # store is pure data movement; see EXPERIMENTS.md Sec. Dry-run)
+            def prefill(params, batch):
+                h = model.hidden_states(params, batch["inputs"])
+                return model._logits_fn(params)(h[:, -1:, :])
+            fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(p_struct, b_struct)
+    else:
+        c_struct, in_struct, len_struct = decode_structs(
+            cfg, model, shape.seq_len, shape.global_batch)
+        c_sh = tree_shardings(mesh, model.cache_specs(), c_struct)
+        res["_cache_struct"] = c_struct
+        res["_cache_sh"] = c_sh
+        serve = make_serve_step(model)
+        in_sh = NamedSharding(mesh, sanitize_spec(
+            mesh, P(batch_axes(mesh)), in_struct.shape))
+        fn = jax.jit(serve,
+                     in_shardings=(p_sh, c_sh, in_sh, NamedSharding(
+                         mesh, P())),
+                     donate_argnums=(1,))
+        lowered = fn.lower(p_struct, c_struct, in_struct, len_struct)
+    res["lower_s"] = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    res["compile_s"] = time.time() - t0
+    res["status"] = "ok"
+
+    _fill_analysis(res, compiled, chips, save_hlo,
+                   f"{arch}__{shape_name}__{mesh_name}")
+    n_total = rl.count_params(p_struct)
+    n_active = rl.active_params(cfg, n_total)
+    res["params_total"] = n_total
+    res["params_active"] = n_active
+    param_bytes = _tree_bytes_per_chip(p_struct, p_sh)
+    opt_bytes = _tree_bytes_per_chip(o_struct, o_sh)
+    res["param_bytes_per_chip"] = param_bytes
+    res["opt_bytes_per_chip"] = opt_bytes
+    res["state_bytes_per_chip"] = param_bytes + opt_bytes
+
+    mf = rl.model_flops(cfg, n_total, n_active, shape.seq_len,
+                        shape.global_batch, shape.kind)
+    res["model_flops_total"] = mf
+    hlo_flops = res["dot_flops_per_chip"]
+    if hlo_flops:
+        res["model_flops_ratio"] = mf / chips / hlo_flops
+
+    # analytic HBM traffic (see rl.memory_traffic_*)
+    cbytes = jnp.dtype(cfg.compute_dtype).itemsize
+
+    def per_chip(shape_t, spec):
+        n = cbytes
+        for d in shape_t:
+            n *= d
+        sp = sanitize_spec(mesh, spec, shape_t)
+        shards = 1
+        for entry in sp:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                shards *= mesh.shape[a]
+        return n / shards
+
+    baxes = batch_axes(mesh)
+    B, S, D, V = (shape.global_batch, shape.seq_len, cfg.d_model,
+                  cfg.vocab_size)
+    if shape.kind == "train":
+        carry = model.n_stack * per_chip((B, S, D), P(baxes, "model", None))
+        logits = per_chip((B, S, V), P(baxes, None, "model"))
+        attn_io = 0.0
+        if cfg.family not in ("ssm",):
+            nq = max(1, S // cfg.attn_chunk_q)
+            if cfg.is_mla:
+                kv = per_chip((B, S, cfg.kv_lora_rank + cfg.q_rope_dim),
+                              P(baxes, None, None))
+            else:
+                kv = 2 * per_chip((B, S, cfg.n_kv_heads,
+                                   cfg.resolved_head_dim),
+                                  P(baxes, None, "model", None))
+            n_attn = (cfg.n_layers if cfg.family != "hybrid"
+                      else cfg.n_layers // cfg.shared_attn_every)
+            attn_io = n_attn * nq * kv
+        traffic = rl.memory_traffic_train(param_bytes, param_bytes,
+                                          opt_bytes, carry, logits, attn_io)
+    elif shape.kind == "prefill":
+        carry = 0.0
+        logits = per_chip((B, 1, V), P(baxes, None, "model"))
+        attn_io = 0.0
+        if cfg.family not in ("ssm",):
+            nq = max(1, S // cfg.attn_chunk_q)
+            if cfg.is_mla:
+                kv = per_chip((B, S, cfg.kv_lora_rank + cfg.q_rope_dim),
+                              P(baxes, None, None))
+            else:
+                kv = 2 * per_chip((B, S, cfg.n_kv_heads,
+                                   cfg.resolved_head_dim),
+                                  P(baxes, None, "model", None))
+            n_attn = (cfg.n_layers if cfg.family != "hybrid"
+                      else cfg.n_layers // cfg.shared_attn_every)
+            attn_io = n_attn * nq * kv
+        traffic = param_bytes + attn_io + logits
+    else:
+        cache_bytes = _tree_bytes_per_chip(
+            res.pop("_cache_struct"), res.pop("_cache_sh"))
+        res["cache_bytes_per_chip"] = cache_bytes
+        traffic = rl.memory_traffic_decode(param_bytes, cache_bytes)
+    res["hbm_traffic_per_chip"] = traffic
+
+    terms = rl.roofline_terms(hlo_flops, traffic,
+                              res["collectives"]["wire_bytes_per_chip"],
+                              chips)
+    res["roofline"] = terms
+    return res
+
+
+def _opt_shardings(mesh, model, o_struct):
+    """Adam moments follow the param specs (ZeRO); int8 QTensor moments
+    keep the PARAM'S shape (quantized.py H3) so q/scale inherit the param
+    PartitionSpec verbatim -- no resharding inside the optimiser."""
+    from repro.optim.quantized import QTensor
+    pspecs = model.param_specs()
+
+    def moment_sh(spec, leaf):
+        if isinstance(leaf, QTensor):
+            return QTensor(
+                NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.q.shape)),
+                NamedSharding(mesh, sanitize_spec(mesh, spec,
+                                                  leaf.scale.shape)),
+                leaf.shape, leaf.block)
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+
+    is_spec = lambda x: isinstance(x, P)
+    m_sh = jax.tree.map(moment_sh, pspecs, o_struct.m, is_leaf=is_spec)
+    v_sh = jax.tree.map(moment_sh, pspecs, o_struct.v, is_leaf=is_spec)
+    return type(o_struct)(count=NamedSharding(mesh, P()), m=m_sh, v=v_sh)
+
+
+def _fill_analysis(res, compiled, chips, save_hlo, tag):
+    from repro.launch import hlo_analysis
+    res["memory"] = _memory_analysis(compiled)
+    res["cost_raw"] = _cost_analysis(compiled)   # NB: counts loop bodies once
+    text = compiled.as_text()
+    res["hlo_chars"] = len(text)
+    mod = hlo_analysis.analyze(text)
+    res["collectives"] = {"counts": mod.coll_counts,
+                          "result_bytes": mod.coll_result_bytes,
+                          "wire_bytes_per_chip": mod.coll_wire}
+    res["dot_flops_per_chip"] = mod.dot_flops    # loop-corrected
+    res["loops"] = mod.loops[:40]
+    if save_hlo:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        with gzip.open(RESULTS_DIR / f"{tag}.hlo.gz", "wt") as f:
+            f.write(text)
+    res["chips"] = chips
+
+
+def run_funcsne_cell(cell: str, multi_pod: bool,
+                     save_hlo: bool = False) -> dict:
+    """Lower + compile the distributed FUnc-SNE step at production scale."""
+    mesh_name = "multi" if multi_pod else "single"
+    res = {"arch": "funcsne-1m", "shape": cell, "mesh": mesh_name}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = funcsne.FuncSNEConfig(backend="xla", **FUNCSNE_CELLS[cell])
+    points_axes = batch_axes(mesh)
+    step, _ = funcsne.make_distributed_step(cfg, mesh,
+                                            points_axes=points_axes,
+                                            feat_axis="model")
+    n, m = cfg.n_points, cfg.dim_hd
+    x_struct = jax.ShapeDtypeStruct(
+        (n, m), jnp.float32, sharding=NamedSharding(mesh, P(None, "model")))
+    repl = NamedSharding(mesh, P())
+    st_struct = jax.eval_shape(
+        lambda: funcsne.init_state(jax.random.PRNGKey(0),
+                                   jnp.zeros((n, m), jnp.float32), cfg,
+                                   init="random"))
+    st_struct = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=repl),
+        st_struct)
+    hp_struct = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=repl),
+        funcsne.default_hparams(n))
+
+    t0 = time.time()
+    lowered = step.lower(st_struct, x_struct, hp_struct)
+    res["lower_s"] = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    res["compile_s"] = time.time() - t0
+    res["status"] = "ok"
+    _fill_analysis(res, compiled, chips, save_hlo,
+                   f"funcsne-1m__{cell}__{mesh_name}")
+    # analytic work per iteration: candidate dists + forces (f32 MACs)
+    c_tot = cfg.c_hd + cfg.c_ld
+    res["model_flops_total"] = float(
+        3 * n * cfg.c_hd * m                              # HD dists
+        + 3 * n * cfg.c_ld * cfg.dim_ld                   # LD dists
+        + 8 * n * (cfg.k_hd + cfg.k_ld + cfg.n_negatives) * cfg.dim_ld)
+    res["params_total"] = n * m
+    # distances/forces are elementwise (no HLO dots): use the analytic count
+    flops_per_chip = res["model_flops_total"] / chips \
+        + res["dot_flops_per_chip"]
+    res["model_flops_ratio"] = 1.0
+    state_bytes = float(sum(
+        s.size * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(st_struct)))
+    x_gather = 4.0 * n * cfg.c_hd * m / chips
+    res["hbm_traffic_per_chip"] = 2.0 * state_bytes + x_gather
+    res["state_bytes_per_chip"] = state_bytes + 4.0 * n * m / chips
+    res["roofline"] = rl.roofline_terms(
+        flops_per_chip, res["hbm_traffic_per_chip"],
+        res["collectives"]["wire_bytes_per_chip"], chips)
+    del c_tot
+    return res
+
+
+# --------------------------------------------------------------------------
+# CLI
+
+
+def all_cells():
+    cells = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            cells.append((arch, shape))
+    for cell in FUNCSNE_CELLS:
+        cells.append(("funcsne-1m", cell))
+    return cells
+
+
+def run_one(arch: str, shape: str, mesh: str, *, force=False,
+            save_hlo=False, overrides: dict = None, tag: str = "") -> dict:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out = RESULTS_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    multi = mesh == "multi"
+    try:
+        if arch == "funcsne-1m":
+            res = run_funcsne_cell(shape, multi, save_hlo)
+        else:
+            res = run_lm_cell(arch, shape, multi, save_hlo, overrides)
+    except Exception as e:
+        res = {"arch": arch, "shape": shape, "mesh": mesh,
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()}
+    out.write_text(json.dumps(res, indent=1, default=float))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. moe_impl=a2a")
+    ap.add_argument("--tag", default="", help="result filename suffix")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        key, val = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except ValueError:
+                continue
+        overrides[key] = val
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    for arch, shape in cells:
+        for mesh in meshes:
+            t0 = time.time()
+            res = run_one(arch, shape, mesh, force=args.force,
+                          save_hlo=args.save_hlo,
+                          overrides=overrides or None, tag=args.tag)
+            status = res.get("status")
+            extra = ""
+            if status == "ok":
+                r = res.get("roofline", {})
+                extra = (f" compute={r.get('compute_s', 0):.3e}s "
+                         f"mem={r.get('memory_s', 0):.3e}s "
+                         f"coll={r.get('collective_s', 0):.3e}s "
+                         f"bottleneck={r.get('bottleneck')}")
+            elif status == "error":
+                extra = " " + res.get("error", "")[:200]
+            print(f"[{time.time() - t0:7.1f}s] {arch} {shape} {mesh}: "
+                  f"{status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""Post-SPMD HLO analyzer: loop-aware FLOPs and collective wire bytes.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model is undercounted by the trip count (verified
+empirically: an 8-step scanned matmul reports 1 matmul of flops).  This
+module re-derives, from ``compiled.as_text()``:
+
+  - dot FLOPs per computation (2 * prod(result) * prod(contracted dims)),
+  - collective wire bytes per chip (ring formulas, replica-group aware),
+
+and multiplies each computation's totals by the product of enclosing
+while-loop trip counts (inferred from the loop-condition comparison
+constant).  The result is the per-chip per-step cost of the partitioned
+module, which feeds the roofline compute / collective terms.
+
+Known approximations (documented in EXPERIMENTS.md):
+  - elementwise/transcendental FLOPs are ignored (dots dominate),
+  - conv ops are absent from our models (explicit shift-conv),
+  - trip counts use the largest constant in the condition computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT )?%([\w\.\-]+)\s*=\s*(.+?)\s*"
+                    r"([a-z][a-z0-9\-]*)\(")
+_PARAM_DECL = re.compile(r"%?([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*"
+                    r"body=%?([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|true_computation|false_computation)"
+                    r"=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST = re.compile(r"constant\((\d+)\)")
+_GROUPS_CURLY = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIMS = re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _first_shape(type_str: str):
+    """(dtype, dims) of the first array shape in a type string."""
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _all_shapes_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    shapes: Dict[str, str]                  # instr/param name -> type string
+    dot_flops: float = 0.0
+    coll_wire: float = 0.0
+    coll_result_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    whiles: List[tuple] = dataclasses.field(default_factory=list)
+    # (cond_name, body_name)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    max_const: int = 0                       # for trip-count inference
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = Computation(name=m.group(1), shapes={})
+                comps[cur.name] = cur
+                for pname, ptype in _PARAM_DECL.findall(m.group(2)):
+                    cur.shapes[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            mc = _CONST.search(line)
+            if mc:
+                cur.max_const = max(cur.max_const, int(mc.group(1)))
+            continue
+        name, type_str, op = mi.groups()
+        cur.shapes[name] = type_str
+        mc = _CONST.search(line)
+        if mc:
+            cur.max_const = max(cur.max_const, int(mc.group(1)))
+        if op == "dot":
+            cur.dot_flops += _dot_flops(line, type_str, cur.shapes)
+        elif op in COLLECTIVES or any(
+                op == c + s for c in COLLECTIVES for s in ("-start",)):
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                out_b = _all_shapes_bytes(type_str)
+                g = _group_size(line)
+                cur.coll_counts[base] = cur.coll_counts.get(base, 0) + 1
+                cur.coll_result_bytes[base] = \
+                    cur.coll_result_bytes.get(base, 0.0) + out_b
+                cur.coll_wire += _wire_bytes(base, out_b, g)
+        elif op == "while":
+            mw = _WHILE.search(line)
+            if mw:
+                cur.whiles.append((mw.group(1), mw.group(2)))
+        elif op in ("fusion", "call", "conditional", "map"):
+            for callee in _CALLS.findall(line):
+                cur.calls.append(callee)
+            mb = _BRANCHES.search(line)
+            if mb:     # NB: all branches counted (upper bound for gated work)
+                for c in mb.group(1).split(","):
+                    cur.calls.append(c.strip().lstrip("%"))
+    return comps
+
+
+def _dot_flops(line: str, result_type: str, shapes: Dict[str, str]) -> float:
+    res = _first_shape(result_type)
+    if res is None:
+        return 0.0
+    _, rdims = res
+    n_out = 1
+    for d in rdims:
+        n_out *= d
+    # contracted size from the lhs operand shape
+    args = re.search(r"\bdot\(([^)]*)\)", line)
+    k = 1
+    mc = _LHS_CDIMS.search(line)
+    if args and mc:
+        ops = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+        lhs_type = shapes.get(ops[0]) if ops else None
+        if lhs_type:
+            sh = _first_shape(lhs_type)
+            if sh:
+                for ci in [int(c) for c in mc.group(1).split(",") if c]:
+                    if ci < len(sh[1]):
+                        k *= sh[1][ci]
+    return 2.0 * n_out * k
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_CURLY.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))      # [n_groups, group_size]
+    return 2
+
+
+def _wire_bytes(op: str, out_b: float, g: int) -> float:
+    if op == "all-gather":
+        return out_b * (g - 1) / max(g, 1)
+    if op == "all-reduce":
+        return 2.0 * out_b * (g - 1) / max(g, 1)
+    if op == "reduce-scatter":
+        return out_b * (g - 1)
+    if op == "all-to-all":
+        return out_b * (g - 1) / max(g, 1)
+    return out_b                     # collective-permute
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    dot_flops: float
+    coll_wire: float
+    coll_counts: Dict[str, float]
+    coll_result_bytes: Dict[str, float]
+    loops: List[dict]
+
+    def as_dict(self):
+        return {"dot_flops": self.dot_flops,
+                "wire_bytes_per_chip": self.coll_wire,
+                "counts": self.coll_counts,
+                "result_bytes": self.coll_result_bytes,
+                "loops": self.loops}
+
+
+def analyze(text: str, entry: str = None) -> ModuleCost:
+    comps = parse_module(text)
+    if entry is None:
+        entry = next((c for c in comps if "main" in c), None) \
+            or next(iter(comps))
+    loops: List[dict] = []
+
+    def walk(name: str, mult: float, depth: int):
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0, 0.0, {}, {}
+        flops = comp.dot_flops * mult
+        wire = comp.coll_wire * mult
+        counts = {k: v * mult for k, v in comp.coll_counts.items()}
+        rbytes = {k: v * mult for k, v in comp.coll_result_bytes.items()}
+        subcalls = [(body, max(comps.get(cond, Computation("", {}))
+                               .max_const, 1))
+                    for cond, body in comp.whiles]
+        for name_, trip in subcalls:
+            loops.append({"body": name_, "trip": trip, "depth": depth})
+        subcalls += [(callee, 1) for callee in comp.calls]
+        for sub, trip in subcalls:
+            f, w, c, rb = walk(sub, mult * trip, depth + 1)
+            flops += f
+            wire += w
+            for k, v in c.items():
+                counts[k] = counts.get(k, 0) + v
+            for k, v in rb.items():
+                rbytes[k] = rbytes.get(k, 0) + v
+        return flops, wire, counts, rbytes
+
+    flops, wire, counts, rbytes = walk(entry, 1.0, 0)
+    return ModuleCost(flops, wire, counts, rbytes, loops)

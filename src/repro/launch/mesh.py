@@ -1,0 +1,63 @@
+"""Production mesh construction + sharding utilities.
+
+The assigned production mesh is (data=16, model=16) per pod (256 chips,
+v5e), and (pod=2, data=16, model=16) for the 2-pod multi-pod dry-run.
+Importing this module never touches jax device state; meshes are built
+only inside ``make_production_mesh()``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import AxisType, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim.
+
+    Keeps every (arch x shape) cell shardable without per-arch special
+    cases (e.g. 24 SSD heads on a 16-wide model axis, batch=1 decode).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        size = _axis_size(mesh, entry)
+        out.append(entry if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+def tree_shardings(mesh, spec_tree, shape_tree) -> Any:
+    """NamedSharding tree from a PartitionSpec tree + eval_shape tree."""
+    def one(spec, shaped):
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, shaped.shape))
+
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

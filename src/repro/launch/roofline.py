@@ -1,0 +1,171 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Terms (per EXPERIMENTS.md methodology, v5e constants):
+  compute    = HLO_FLOPs / (chips * 197e12)              [s]
+  memory     = HLO_bytes / (chips * 819e9)               [s]
+  collective = wire_bytes_per_chip / 50e9                [s]
+
+cost_analysis() reports whole-program FLOPs/bytes (all chips together in
+SPMD, i.e. per-chip values times... XLA reports the per-module numbers of
+the partitioned module, which is per-chip); we treat them as per-chip and
+therefore divide the analytic MODEL_FLOPS by `chips` when comparing.
+
+Wire bytes per chip per collective op (ring algorithms, G = group size):
+  all-gather      : out * (G-1)/G
+  all-reduce      : 2 * out * (G-1)/G
+  reduce-scatter  : out * (G-1)          (input = out*G)
+  all-to-all      : out * (G-1)/G
+  collective-permute : out
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9_\[\]{},: ]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]
+    wire_bytes_per_chip: float
+
+    def as_dict(self):
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "wire_bytes_per_chip": self.wire_bytes_per_chip}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    result_bytes: Dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(3).lower()
+        if "-done(" in line:      # async pair: count only the -start
+            continue
+        shape_str = m.group(1) or m.group(2) or ""
+        out_b = _shape_bytes(shape_str)
+        if out_b == 0:
+            continue
+        g = _group_size(line)
+        counts[op] = counts.get(op, 0) + 1
+        result_bytes[op] = result_bytes.get(op, 0) + out_b
+        if op == "all-gather":
+            wire += out_b * (g - 1) / max(g, 1)
+        elif op == "all-reduce":
+            wire += 2.0 * out_b * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire += out_b * (g - 1)
+        elif op == "all-to-all":
+            wire += out_b * (g - 1) / max(g, 1)
+        else:                      # collective-permute
+            wire += out_b
+    return CollectiveStats(counts, result_bytes, wire)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))       # iota form is [n_groups, group_size]
+    return 2
+
+
+def roofline_terms(flops: float, bytes_accessed: float, wire_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    """All inputs are per-chip (SPMD partitioned module) quantities."""
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = wire_bytes / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms
+
+
+def model_flops(cfg, n_params_total: int, n_params_active: int,
+                seq_len: int, global_batch: int, kind: str) -> float:
+    """6*N*D for train, 2*N_active*D for decode/prefill forward-only."""
+    tokens = seq_len * global_batch if kind != "decode" else global_batch
+    n = n_params_active
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def memory_traffic_train(param_bytes: float, grad_bytes: float,
+                         opt_bytes: float, carry_bytes: float,
+                         logits_bytes: float, attn_io_bytes: float) -> float:
+    """Per-chip HBM traffic model for one train step (lower bound).
+
+    params are read in fwd, remat-recompute, and bwd (3x); gradients are
+    written then read by the optimiser (2x); optimiser state is read and
+    written (2x); remat carries are written in fwd and read in bwd (2x);
+    logits are produced in fwd, recomputed, and consumed by the CE grad
+    (3x); attention KV streaming reads per q-chunk (attn_io) happen in fwd
+    + recompute + bwd (3x).
+    """
+    return (3.0 * param_bytes + 2.0 * grad_bytes + 2.0 * opt_bytes
+            + 2.0 * carry_bytes + 3.0 * logits_bytes + 3.0 * attn_io_bytes)
+
+
+def memory_traffic_decode(param_bytes: float, cache_bytes: float) -> float:
+    """Decode reads every live parameter and the whole KV cache once."""
+    return param_bytes + cache_bytes
+
+
+def count_params(shapes_tree) -> int:
+    import jax
+    total = 0
+    for leaf in jax.tree.leaves(shapes_tree):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total
+
+
+def active_params(cfg, total: int) -> int:
+    """Active parameters per token for MoE archs (else = total)."""
+    if not cfg.is_moe:
+        return total
+    F = cfg.d_ff_expert or cfg.d_ff
+    expert_p = cfg.n_experts * 3 * cfg.d_model * F
+    n_moe_layers = cfg.n_layers - (1 if cfg.moe_dense_first else 0)
+    routed_total = n_moe_layers * expert_p
+    routed_active = routed_total * cfg.moe_top_k / cfg.n_experts
+    return int(total - routed_total + routed_active)

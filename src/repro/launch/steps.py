@@ -1,0 +1,91 @@
+"""Train / serve step builders shared by the trainer and the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import batch_axes
+from repro.models.common import ShardCtx
+from repro.models.transformer import LMModel
+from repro.optim import adamw, clip_by_global_norm, warmup_cosine
+
+
+def make_model(cfg: ArchConfig, mesh=None,
+               global_batch: Optional[int] = None) -> LMModel:
+    baxes = batch_axes(mesh) if mesh is not None else ("data",)
+    model_axis = "model"
+    if (cfg.pure_dp and mesh is not None and global_batch is not None
+            and global_batch % mesh.size == 0):
+        baxes = baxes + ("model",)     # §Perf H9: model axis as extra DP
+        model_axis = None
+    ctx = ShardCtx(mesh=mesh, batch=baxes, model=model_axis)
+    return LMModel(cfg, ctx)
+
+
+def make_optimizer(cfg: ArchConfig, *, peak_lr: float = 3e-4,
+                   warmup: int = 200, total: int = 10000):
+    return adamw(warmup_cosine(peak_lr, warmup, total),
+                 moment_dtype=cfg.opt_state_dtype)
+
+
+def make_train_step(model: LMModel, opt, *, clip_norm: float = 1.0):
+    """(params, opt_state, batch{inputs,labels}) -> (params, opt_state,
+    metrics).  Pure; jit/shard at the call site."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss_and_aux(p, batch["inputs"], batch["labels"])
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: LMModel):
+    def serve_step(params, cache, inputs, cur_len):
+        return model.serve_step(params, cache, inputs, cur_len)
+
+    return serve_step
+
+
+def batch_struct(cfg: ArchConfig, seq_len: int, global_batch: int):
+    """ShapeDtypeStruct stand-ins for one training batch."""
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    else:  # modality frontend stub: precomputed frame/patch embeddings
+        inputs = jax.ShapeDtypeStruct((global_batch, seq_len, cfg.d_model),
+                                      jnp.bfloat16)
+    labels = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    return {"inputs": inputs, "labels": labels}
+
+
+def decode_structs(cfg: ArchConfig, model: LMModel, seq_len: int,
+                   global_batch: int):
+    """(cache, inputs, cur_len) ShapeDtypeStructs for one decode step."""
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, global_batch, seq_len))
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((global_batch, 1, cfg.d_model),
+                                      jnp.bfloat16)
+    cur_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, inputs, cur_len
+
+
+def params_and_opt_structs(cfg: ArchConfig, model: LMModel, opt):
+    params = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0)))
+    opt_state = jax.eval_shape(lambda: opt.init(params))
+    return params, opt_state

@@ -1,0 +1,9 @@
+"""LM model substrate: one composable decoder-LM covering all assigned archs.
+
+Block types: dense GQA attention (llama/qwen/yi/chameleon/musicgen),
+Gemma2 local/global alternating with logit softcaps, MLA (DeepSeek-V2),
+token-choice MoE with EP argsort dispatch (OLMoE/DeepSeek-V2), Mamba2 SSD
+(mamba2/zamba2), and the Zamba2 shared-attention hybrid.
+"""
+
+from repro.models.transformer import LMModel  # noqa: F401

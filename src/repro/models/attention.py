@@ -1,0 +1,296 @@
+"""Attention layers: GQA (chunked flash for XLA, Pallas kernel on TPU),
+Gemma2 local/global, MLA (DeepSeek-V2 latent KV), and decode paths.
+
+The training/prefill path uses a double-scan online-softmax implementation
+(`flash_chunked`): O(S * chunk) live memory instead of O(S^2), numerically
+identical to materialised softmax.  It lowers on any backend, which is what
+the multi-pod dry-run compiles; on TPU runtime the Pallas flash kernel
+(repro.kernels.flash_attention) is a drop-in for the inner loop.
+
+Decode uses direct einsum over the KV cache: with the cache sequence dim
+sharded over the `model` axis the max/sum reductions become XLA's
+flash-decoding (split-K) pattern under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ShardCtx, apply_rope, dense_init, rms_norm,
+                                 softcap)
+
+_NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# Core chunked flash attention (XLA path; layout (B, S, H, D))
+
+
+def flash_chunked(q, k, v, *, chunk_q: int = 0, chunk_k: int = 512,
+                  scale: float, cap: float = 0.0, window: int = 0,
+                  q_offset=0, score_budget_bytes: int = 192 * 2 ** 20,
+                  seq_shards: int = 1):
+    """seq_shards: how many ways the (B, S, H) score rows are sharded
+    across chips (sequence- or head-parallel); sizes the chunk budget."""
+    """Causal GQA attention: one online-softmax scan over KV chunks.
+
+    Sequence-parallel design (DESIGN.md Sec. 5): q keeps its (sharded) S
+    dim intact -- the scan iterates over KV chunks only, so no sharded
+    dimension is ever sliced inside the loop and the layout works for ANY
+    head count (28, 40, 56 q-heads on a 16-wide model axis included).
+    KV is replicated over the model axis by the caller.
+
+    chunk_k adapts downward so the live (B, S/seq_shards, H, ck) f32 score
+    tile stays under ``score_budget_bytes`` per chip.
+
+    q: (B, Sq, Hq, D); k: (B, Sk, Hkv, D); v: (B, Sk, Hkv, Dv) -- Dv may
+    differ from D (MLA attends over the latent).  q_offset: global position
+    of q[0].  Returns (B, Sq, Hq, Dv).  chunk_q is accepted for
+    API compatibility and ignored.
+    """
+    del chunk_q
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    group = Hq // Hkv
+
+    col_bytes = 4 * B * max(Sq // seq_shards, 1) * Hq
+    ck = min(chunk_k, Sk)
+    while ck > 128 and col_bytes * ck > score_budget_bytes:
+        ck //= 2
+    while Sk % ck:
+        ck //= 2
+    nk = Sk // ck
+
+    qg = q.reshape(B, Sq, Hkv, group, D)
+    kg = k.reshape(B, nk, ck, Hkv, D).swapaxes(0, 1)
+    vg = v.reshape(B, nk, ck, Hkv, Dv).swapaxes(0, 1)
+    rows = q_offset + jnp.arange(Sq)
+
+    def kv_block(carry, ki):
+        m, l, acc = carry
+        ik, kc, vc = ki                          # kc: (B, ck, Hkv, D)
+        cols = ik * ck + jnp.arange(ck)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        mask = cols[None, :] <= rows[:, None]
+        if window:
+            mask &= cols[None, :] > rows[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(m_new[..., None] > _NEG / 2, p, 0.0)
+        corr = jnp.where(m > _NEG / 2, jnp.exp(m - m_new), 0.0)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Sq, Hkv, group), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, group), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, group, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                  (jnp.arange(nk), kg, vg))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, scale: float,
+                     cap: float = 0.0, window: int = 0):
+    """One-token attention over a (B, Smax, Hkv, D) cache.
+
+    q: (B, 1, Hq, D); cur_len: () current length *including* the new token.
+    """
+    B, Smax, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    pos = jnp.arange(Smax)
+    mask = pos[None, :] < cur_len
+    if window:
+        mask &= pos[None, :] > cur_len - 1 - window
+    s = jnp.where(mask[:, None, None, :] if mask.ndim == 2
+                  else mask[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer
+
+
+def init_gqa(rng, cfg):
+    D, H, Hkv, Dh = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                     cfg.resolved_head_dim)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, Dh), dt, fan_in=D),
+        "wk": dense_init(ks[1], (D, Hkv, Dh), dt, fan_in=D),
+        "wv": dense_init(ks[2], (D, Hkv, Dh), dt, fan_in=D),
+        "wo": dense_init(ks[3], (H, Dh, D), dt, fan_in=H * Dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), dt)
+        p["bk"] = jnp.zeros((Hkv, Dh), dt)
+        p["bv"] = jnp.zeros((Hkv, Dh), dt)
+    return p
+
+
+def gqa_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    s = {"wq": P("data", "model", None), "wk": P("data", "model", None),
+         "wv": P("data", "model", None), "wo": P("model", None, "data")}
+    if cfg.qkv_bias:
+        s.update({"bq": P("model", None), "bk": P("model", None),
+                  "bv": P("model", None)})
+    return s
+
+
+def gqa_apply(p, h, cfg, ctx: ShardCtx, *, window: int = 0, positions=None,
+              cache=None, cur_len=None):
+    """h: (B, S, D).  cache: dict(k, v) -> updated in decode mode."""
+    B, S, D = h.shape
+    Dh = cfg.resolved_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = h.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :] if cur_len is None \
+            else (cur_len - 1) * jnp.ones((B, 1), jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = Dh ** -0.5
+
+    new_cache = None
+    if cache is None:
+        # sequence-parallel attention: q rows stay S-sharded over the model
+        # axis (works for any head count); KV is gathered (replicated) once
+        # per layer, so the KV scan never slices a sharded dim.
+        q = ctx.constrain(q, ctx.batch_spec, ctx.model, None, None)
+        k = ctx.constrain(k, ctx.batch_spec, None, None, None)
+        v = ctx.constrain(v, ctx.batch_spec, None, None, None)
+        out = flash_chunked(q, k, v, chunk_k=min(cfg.attn_chunk_k, S),
+                            scale=scale, cap=cfg.attn_softcap, window=window,
+                            seq_shards=ctx.model_size)
+        out = ctx.constrain(out, ctx.batch_spec, ctx.model, None, None)
+    else:
+        # decode: append to cache at cur_len - 1, attend over prefix
+        idx = (cur_len - 1).astype(jnp.int32)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), idx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": kc, "v": vc}
+        out = decode_attention(q, kc, vc, cur_len, scale=scale,
+                               cap=cfg.attn_softcap, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV with decoupled RoPE head
+
+
+def init_mla(rng, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    L, dn, dr, dv = (cfg.kv_lora_rank, cfg.q_nope_dim, cfg.q_rope_dim,
+                     cfg.v_head_dim)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq": dense_init(ks[0], (D, H, dn + dr), dt, fan_in=D),
+        "w_dkv": dense_init(ks[1], (D, L + dr), dt, fan_in=D),
+        "kv_norm": jnp.zeros((L,), dt) + 1.0,
+        "w_uk": dense_init(ks[2], (L, H, dn), dt, fan_in=L),
+        "w_uv": dense_init(ks[3], (L, H, dv), dt, fan_in=L),
+        "wo": dense_init(ks[4], (H, dv, D), dt, fan_in=H * dv),
+    }
+
+
+def mla_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    return {"wq": P("data", "model", None), "w_dkv": P("data", None),
+            "kv_norm": P(None), "w_uk": P(None, "model", None),
+            "w_uv": P(None, "model", None), "wo": P("model", None, "data")}
+
+
+def mla_apply(p, h, cfg, ctx: ShardCtx, *, positions=None, cache=None,
+              cur_len=None, window: int = 0):
+    B, S, D = h.shape
+    L, dn, dr = cfg.kv_lora_rank, cfg.q_nope_dim, cfg.q_rope_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = h.astype(cd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :] if cur_len is None \
+            else (cur_len - 1) * jnp.ones((B, 1), jnp.int32)
+
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dk->bsk", h, p["w_dkv"].astype(cd))
+    latent = rms_norm(ckv[..., :L], p["kv_norm"])
+    k_rope = apply_rope(ckv[..., L:], positions, cfg.rope_theta)  # (B,S,dr)
+    scale = (dn + dr) ** -0.5
+
+    new_cache = None
+    if cache is not None:
+        # decode keeps the ABSORBED form: the cache stores only the shared
+        # latent; scores contract q_eff (H, L) against it (MQA-like)
+        q_eff = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"].astype(cd))
+        idx = (cur_len - 1).astype(jnp.int32)
+        lat_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), idx, axis=1)
+        rope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, axis=1)
+        new_cache = {"latent": lat_c, "k_rope": rope_c}
+        latent_all, k_rope_all = lat_c, rope_c
+        Sk = latent_all.shape[1]
+        s = (jnp.einsum("bshl,btl->bhst", q_eff.astype(jnp.float32),
+                        latent_all.astype(jnp.float32))
+             + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                          k_rope_all.astype(jnp.float32))) * scale
+        mask = jnp.arange(Sk)[None, :] < cur_len
+        s = jnp.where(mask[:, None, None, :], s, _NEG)
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btl->bshl", w,
+                           latent_all.astype(jnp.float32))   # (B,S,H,L)
+        out = jnp.einsum("bshl,lhv->bshv", o_lat.astype(cd),
+                         p["w_uv"].astype(cd))
+        out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(cd))
+        return out, new_cache
+
+    # prefill/train: NON-absorbed form (H2, EXPERIMENTS.md §Perf): per-head
+    # K/V are materialised so the score contraction is (dn+dr)=192 wide
+    # instead of (L+dr)=576, and heads (128 = 16x8) shard over the model
+    # axis -- classic TP, S stays unsharded inside this block.
+    k_nope = jnp.einsum("bsl,lhn->bshn", latent, p["w_uk"].astype(cd))
+    v = jnp.einsum("bsl,lhv->bshv", latent, p["w_uv"].astype(cd))
+    kr = jnp.broadcast_to(k_rope[:, :, None, :],
+                          (B, S, cfg.n_heads, dr))
+    kcat = jnp.concatenate([k_nope, kr], axis=-1)            # (B,S,H,dn+dr)
+    qcat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qcat = ctx.constrain(qcat, ctx.batch_spec, None, ctx.model, None)
+    kcat = ctx.constrain(kcat, ctx.batch_spec, None, ctx.model, None)
+    v = ctx.constrain(v, ctx.batch_spec, None, ctx.model, None)
+    shards = ctx.model_size
+    o = flash_chunked(qcat, kcat, v, chunk_k=min(cfg.attn_chunk_k, S),
+                      scale=scale, cap=0.0, window=window,
+                      seq_shards=shards)
+    o = ctx.constrain(o, ctx.batch_spec, None, ctx.model, None)
+    out = jnp.einsum("bshv,hvd->bsd", o.astype(cd), p["wo"].astype(cd))
+    return out, new_cache

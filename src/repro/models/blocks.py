@@ -1,0 +1,240 @@
+"""Per-family transformer blocks: init / PartitionSpec / apply triples.
+
+Every block apply has the signature
+    apply(params, h, cfg, ctx, *, positions=None, cache=None, cur_len=None)
+returning (h_new, new_cache, aux) so the layer scan in transformer.py is
+family-agnostic.  ``aux`` carries MoE router losses (zeros elsewhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models.common import (ShardCtx, dense_init, gelu, rms_norm, swiglu)
+
+ZERO_AUX = {"load_balance": 0.0, "router_z": 0.0, "dropped_frac": 0.0}
+
+
+def _aux(d=None):
+    out = {k: jnp.float32(v) for k, v in ZERO_AUX.items()}
+    if d:
+        out.update({k: jnp.float32(v) if not hasattr(v, "dtype") else v
+                    for k, v in d.items()})
+    return out
+
+
+# --------------------------------------------------------------------------
+# Dense MLP
+
+
+def init_mlp(rng, cfg, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 3)
+    return {"w_gate": dense_init(ks[0], (D, F), dt, fan_in=D),
+            "w_up": dense_init(ks[1], (D, F), dt, fan_in=D),
+            "w_down": dense_init(ks[2], (F, D), dt, fan_in=F)}
+
+
+def mlp_specs(cfg):
+    return {"w_gate": P("data", "model"), "w_up": P("data", "model"),
+            "w_down": P("model", "data")}
+
+
+def mlp_apply(p, x, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cd)
+    g = x @ p["w_gate"].astype(cd)
+    u = x @ p["w_up"].astype(cd)
+    h = gelu(g) * u if cfg.mlp_act == "geglu" else swiglu(g, u)
+    return h @ p["w_down"].astype(cd)
+
+
+def _norm(p, x, cfg):
+    return rms_norm(x, p, plus_one=cfg.norm_plus_one)
+
+
+# --------------------------------------------------------------------------
+# Dense GQA block (llama/qwen/yi/chameleon/musicgen)
+
+
+def init_dense_block(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+    z = jnp.zeros((cfg.d_model,), dt)
+    return {"attn": attn_lib.init_gqa(ks[0], cfg), "mlp": init_mlp(ks[1], cfg),
+            "ln_attn": z + 1.0, "ln_mlp": z + 1.0}
+
+
+def dense_block_specs(cfg):
+    return {"attn": attn_lib.gqa_specs(cfg), "mlp": mlp_specs(cfg),
+            "ln_attn": P(None), "ln_mlp": P(None)}
+
+
+def dense_block_apply(p, h, cfg, ctx: ShardCtx, *, positions=None, cache=None,
+                      cur_len=None, window: int = 0):
+    a, new_cache = attn_lib.gqa_apply(p["attn"], _norm(p["ln_attn"], h, cfg),
+                                      cfg, ctx, window=window,
+                                      positions=positions, cache=cache,
+                                      cur_len=cur_len)
+    h = h + a
+    h = h + mlp_apply(p["mlp"], _norm(p["ln_mlp"], h, cfg), cfg)
+    return h, new_cache, _aux()
+
+
+# --------------------------------------------------------------------------
+# Gemma2 pair (local sliding-window layer + global layer, sandwich norms)
+
+
+def init_gemma_pair(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+    z = jnp.zeros((cfg.d_model,), dt)
+
+    def sub(r):
+        k1, k2 = jax.random.split(r)
+        return {"attn": attn_lib.init_gqa(k1, cfg),
+                "mlp": init_mlp(k2, cfg),
+                "ln_attn_pre": z + 0.0, "ln_attn_post": z + 0.0,
+                "ln_mlp_pre": z + 0.0, "ln_mlp_post": z + 0.0}
+
+    return {"local": sub(ks[0]), "global": sub(ks[1])}
+
+
+def gemma_pair_specs(cfg):
+    sub = {"attn": attn_lib.gqa_specs(cfg), "mlp": mlp_specs(cfg),
+           "ln_attn_pre": P(None), "ln_attn_post": P(None),
+           "ln_mlp_pre": P(None), "ln_mlp_post": P(None)}
+    return {"local": sub, "global": dict(sub)}
+
+
+def _gemma_sub_apply(p, h, cfg, ctx, *, window, positions, cache, cur_len):
+    a, new_cache = attn_lib.gqa_apply(
+        p["attn"], _norm(p["ln_attn_pre"], h, cfg), cfg, ctx, window=window,
+        positions=positions, cache=cache, cur_len=cur_len)
+    h = h + _norm(p["ln_attn_post"], a, cfg)
+    m = mlp_apply(p["mlp"], _norm(p["ln_mlp_pre"], h, cfg), cfg)
+    h = h + _norm(p["ln_mlp_post"], m, cfg)
+    return h, new_cache
+
+
+def gemma_pair_apply(p, h, cfg, ctx: ShardCtx, *, positions=None, cache=None,
+                     cur_len=None, window: int = 0):
+    del window
+    c_l = cache["local"] if cache is not None else None
+    c_g = cache["global"] if cache is not None else None
+    h, nc_l = _gemma_sub_apply(p["local"], h, cfg, ctx,
+                               window=cfg.local_window, positions=positions,
+                               cache=c_l, cur_len=cur_len)
+    h, nc_g = _gemma_sub_apply(p["global"], h, cfg, ctx, window=0,
+                               positions=positions, cache=c_g,
+                               cur_len=cur_len)
+    new_cache = None if cache is None else {"local": nc_l, "global": nc_g}
+    return h, new_cache, _aux()
+
+
+# --------------------------------------------------------------------------
+# MoE block (OLMoE: GQA + MoE; DeepSeek-V2: MLA + shared/routed MoE)
+
+
+def init_moe_block(rng, cfg, *, dense_ffn: bool = False):
+    ks = jax.random.split(rng, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+    z = jnp.zeros((cfg.d_model,), dt)
+    attn = (attn_lib.init_mla(ks[0], cfg) if cfg.is_mla
+            else attn_lib.init_gqa(ks[0], cfg))
+    ffn = (init_mlp(ks[1], cfg) if dense_ffn
+           else moe_lib.init_moe(ks[1], cfg))
+    return {"attn": attn, "ffn": ffn, "ln_attn": z + 1.0, "ln_mlp": z + 1.0}
+
+
+def moe_block_specs(cfg, *, dense_ffn: bool = False):
+    attn = attn_lib.mla_specs(cfg) if cfg.is_mla else attn_lib.gqa_specs(cfg)
+    ffn = mlp_specs(cfg) if dense_ffn else moe_lib.moe_specs(cfg)
+    return {"attn": attn, "ffn": ffn, "ln_attn": P(None), "ln_mlp": P(None)}
+
+
+def moe_block_apply(p, h, cfg, ctx: ShardCtx, *, positions=None, cache=None,
+                    cur_len=None, window: int = 0, dense_ffn: bool = False):
+    B, S, D = h.shape
+    apply_attn = attn_lib.mla_apply if cfg.is_mla else attn_lib.gqa_apply
+    a, new_cache = apply_attn(p["attn"], _norm(p["ln_attn"], h, cfg), cfg,
+                              ctx, positions=positions, cache=cache,
+                              cur_len=cur_len, window=window)
+    h = h + a
+    x = _norm(p["ln_mlp"], h, cfg)
+    if dense_ffn:
+        out, aux = mlp_apply(p["ffn"], x, cfg), _aux()
+    elif cfg.moe_impl == "a2a" and cache is None:
+        out, aux_d = moe_lib.moe_apply_a2a(p["ffn"], x, cfg, ctx)
+        aux = _aux(aux_d)
+    else:
+        out, aux_d = moe_lib.moe_apply(p["ffn"], x.reshape(B * S, D), cfg, ctx)
+        out = out.reshape(B, S, D)
+        aux = _aux(aux_d)
+    return h + out, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+
+
+def init_mamba_block(rng, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    z = jnp.zeros((cfg.d_model,), dt)
+    return {"mixer": mamba_lib.init_mamba2(rng, cfg), "ln": z + 1.0}
+
+
+def mamba_block_specs(cfg):
+    return {"mixer": mamba_lib.mamba2_specs(cfg), "ln": P(None)}
+
+
+def mamba_block_apply(p, h, cfg, ctx: ShardCtx, *, positions=None, cache=None,
+                      cur_len=None, window: int = 0):
+    del positions, cur_len, window
+    m, new_cache = mamba_lib.mamba2_apply(p["mixer"], _norm(p["ln"], h, cfg),
+                                          cfg, ctx, cache=cache)
+    return h + m, new_cache, _aux()
+
+
+# --------------------------------------------------------------------------
+# Zamba2 super-block: `shared_attn_every` mamba layers + one application of
+# the SHARED attention+MLP block (parameters reused across super-blocks).
+
+
+def init_zamba_super(rng, cfg):
+    e = cfg.shared_attn_every
+    ks = jax.random.split(rng, e)
+    return {"mamba": jax.vmap(lambda r: init_mamba_block(r, cfg))(
+        jnp.stack(ks))}
+
+
+def zamba_super_specs(cfg):
+    inner = mamba_block_specs(cfg)
+    return {"mamba": jax.tree.map(lambda s: P(None, *s), inner,
+                                  is_leaf=lambda x: isinstance(x, P))}
+
+
+def zamba_super_apply(p, shared_p, h, cfg, ctx: ShardCtx, *, positions=None,
+                      cache=None, cur_len=None):
+    """cache: {'mamba': stacked(e), 'attn': one-layer kv cache}."""
+    def inner(carry, xs):
+        hh = carry
+        bp, bc = xs
+        hh, nc, _ = mamba_block_apply(bp, hh, cfg, ctx, cache=bc,
+                                      cur_len=cur_len)
+        return hh, nc
+
+    m_cache = cache["mamba"] if cache is not None else None
+    h, new_m = jax.lax.scan(inner, h, (p["mamba"], m_cache))
+    a_cache = cache["attn"] if cache is not None else None
+    h, new_a, _ = dense_block_apply(shared_p, h, cfg, ctx,
+                                    positions=positions, cache=a_cache,
+                                    cur_len=cur_len)
+    new_cache = None if cache is None else {"mamba": new_m, "attn": new_a}
+    return h, new_cache, _aux()

@@ -1,0 +1,172 @@
+"""Shared model primitives: norms, RoPE, init, sharding, chunked CE."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# Sharding helper: no-op without a mesh so single-device tests stay clean.
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carries the mesh + axis names used for sharding constraints.
+
+    batch axes: data-parallel axes for the batch dim ('pod','data' multi-pod);
+    model axis: tensor/expert/sequence-parallel axis.
+    """
+    mesh: Optional[object] = None
+    batch: tuple = ("data",)
+    model: Optional[str] = "model"   # None => pure-DP (model axis in batch)
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint with divisibility sanitisation: spec
+        entries whose mesh-axis product does not divide the dim are dropped
+        (e.g. 4 KV heads on a 16-wide model axis -> replicated heads)."""
+        if self.mesh is None:
+            return x
+        entries = list(spec) + [None] * (x.ndim - len(spec))
+        clean = []
+        for dim, entry in zip(x.shape, entries):
+            if entry is None:
+                clean.append(None)
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            clean.append(entry if size > 1 and dim % size == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*clean)))
+
+    @property
+    def batch_spec(self):
+        return self.batch if len(self.batch) > 1 else self.batch[0]
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model is None:
+            return 1
+        return self.mesh.shape[self.model]
+
+
+NO_SHARD = ShardCtx()
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+
+
+def rms_norm(x, scale, eps: float = 1e-6, *, plus_one: bool = False):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one \
+        else scale.astype(jnp.float32)
+    return (y * s).astype(dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                 # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == ang.ndim + 1:                        # (..., S, H, D)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., ::2], x32[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Initialisers
+
+
+def dense_init(rng, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Loss
+
+
+def cross_entropy_chunked(logits_fn, hidden, labels, *, n_chunks: int = 1,
+                          final_softcap: float = 0.0, valid=None):
+    """Causal-LM CE computed over sequence chunks.
+
+    logits_fn: hidden chunk (B, s, D) -> logits (B, s, V).  Chunking bounds
+    the peak (B, s, V) activation (256k-vocab archs) and keeps the matmul
+    sharded over the model axis.
+    Returns (mean_nll, n_tokens).
+    """
+    B, S, _ = hidden.shape
+    assert S % n_chunks == 0
+    s = S // n_chunks
+    if valid is None:
+        valid = jnp.ones((B, S), bool)
+
+    def one(h, y, v):
+        logits = logits_fn(h).astype(jnp.float32)
+        if final_softcap:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * v
+        return jnp.sum(nll), jnp.sum(v)
+
+    if n_chunks == 1:
+        tot, cnt = one(hidden, labels, valid.astype(jnp.float32))
+    else:
+        hs = hidden.reshape(B, n_chunks, s, -1).swapaxes(0, 1)
+        ys = labels.reshape(B, n_chunks, s).swapaxes(0, 1)
+        vs = valid.reshape(B, n_chunks, s).swapaxes(0, 1).astype(jnp.float32)
+
+        def body(carry, xs):
+            h, y, v = xs
+            t, c = one(h, y, v)
+            return (carry[0] + t, carry[1] + c), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                     (hs, ys, vs))
+    return tot / jnp.maximum(cnt, 1.0), cnt

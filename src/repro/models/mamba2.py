@@ -1,0 +1,218 @@
+"""Mamba2 mixer via SSD (state-space duality, arXiv:2405.21060).
+
+Training/prefill runs the chunked SSD algorithm as a single lax.scan over
+sequence chunks: within a chunk the recurrence is the quadratic masked-decay
+form (MXU-friendly (Q x Q) matmuls); across chunks only the (B, H, N, P)
+state is carried.  Memory is O(S·d + Q^2) instead of O(S^2); FLOPs are
+linear in S -- this is why mamba2/zamba2 are the archs that run the
+``long_500k`` shape.
+
+Decode carries (conv_state, ssm_state) and is O(1) per token.
+
+Sharding design (DESIGN.md Sec. 5): every d_inner tensor is kept natively
+in (H, P) head-feature form -- projections are (D, H, P), the causal conv
+runs per (H, P) channel -- and the *feature* dim P (64 for every assigned
+ssm arch) is sharded over the model axis.  There is therefore no
+(B,S,d_inner) <-> (B,S,H,P) reshape across incompatible shardings, which
+would otherwise force a full activation all-gather per layer; H never needs
+to divide the mesh (mamba2-130m has 24 heads on a 16-wide axis).  S stays
+unsharded inside ssm streams so the chunk scan slices an unsharded dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ShardCtx, dense_init
+
+
+def init_mamba2(rng, cfg):
+    D = cfg.d_model
+    N, H, Pd = cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    G = cfg.ssm_ngroups
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 8)
+    dt_init = jnp.exp(jax.random.uniform(ks[6], (H,), jnp.float32,
+                                         jnp.log(0.001), jnp.log(0.1)))
+    return {
+        "w_z": dense_init(ks[0], (D, H, Pd), dt, fan_in=D),
+        "w_x": dense_init(ks[1], (D, H, Pd), dt, fan_in=D),
+        "w_B": dense_init(ks[2], (D, G * N), dt, fan_in=D),
+        "w_C": dense_init(ks[3], (D, G * N), dt, fan_in=D),
+        "w_dt": dense_init(ks[4], (D, H), dt, fan_in=D),
+        "conv_x": dense_init(ks[5], (cfg.ssm_conv, H, Pd), dt,
+                             fan_in=cfg.ssm_conv),
+        "A_log": jnp.log(jax.random.uniform(ks[7], (H,), jnp.float32,
+                                            1.0, 16.0)).astype(jnp.float32),
+        "dt_bias": (dt_init + jnp.log(-jnp.expm1(-dt_init))).astype(
+            jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((H, Pd), dt),
+        "w_out": dense_init(jax.random.fold_in(ks[0], 9), (H, Pd, D), dt,
+                            fan_in=H * Pd),
+    }
+
+
+def mamba2_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    return {"w_z": P("data", None, "model"), "w_x": P("data", None, "model"),
+            "w_B": P("data", None), "w_C": P("data", None),
+            "w_dt": P("data", None), "conv_x": P(None, None, "model"),
+            "A_log": P(None), "dt_bias": P(None), "D_skip": P(None),
+            "norm": P(None, "model"), "w_out": P(None, "model", "data")}
+
+
+def _causal_conv_hp(x, w, state=None):
+    """Depthwise causal conv along S on (B, S, H, P) channels; w: (K, H, P).
+
+    state: (B, K-1, H, P) previous inputs for decode.
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, H, P)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def _ssd_chunk_scan(xh, dt, A, Bm, Cm, Dsk, chunk: int, pin=lambda x: x):
+    """Chunked SSD. xh: (B,S,H,P); dt: (B,S,H); Bm/Cm: (B,S,N) (G=1).
+
+    ``pin`` pins the (B,Q,Q,H) decay/mask intermediates to a known sharding
+    (replicated over the model axis) so GSPMD never re-shards inside the
+    scan.  Single lax.scan over S/chunk chunks carrying the (B,H,N,P) state.
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    Q = chunk
+    xc = xh.reshape(Bsz, nc, Q, H, Pd).swapaxes(0, 1)     # (nc,B,Q,H,P)
+    dtc = dt.reshape(Bsz, nc, Q, H).swapaxes(0, 1)
+    Bc = Bm.reshape(Bsz, nc, Q, N).swapaxes(0, 1)
+    Cc = Cm.reshape(Bsz, nc, Q, N).swapaxes(0, 1)
+
+    def body(h, inputs):
+        x, d, b, c = inputs                # (B,Q,H,P),(B,Q,H),(B,Q,N),(B,Q,N)
+        a = d * A[None, None, :]           # (B,Q,H) negative
+        cums = jnp.cumsum(a, axis=1)       # inclusive
+        # intra-chunk: masked decay matrix per head
+        dec = cums[:, :, None, :] - cums[:, None, :, :]    # (B,Q,Q,H) i,j
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        dec = jnp.where(tri[None, :, :, None], dec, -jnp.inf)
+        L = pin(jnp.exp(dec))
+        cb = jnp.einsum("bqn,bkn->bqk", c, b)              # (B,Q,Q)
+        M = pin(cb[..., None] * L)                         # (B,Q,Q,H)
+        xdt = x * d[..., None]                             # (B,Q,H,P)
+        y = jnp.einsum("bqkh,bkhp->bqhp", M, xdt)
+        # inter-chunk: contribution of the incoming state
+        y = y + jnp.einsum("bqn,bhnp->bqhp", c, h) \
+            * jnp.exp(cums)[..., None]
+        # new state
+        decay_to_end = jnp.exp(cums[:, -1:, :] - cums)     # (B,Q,H)
+        s_new = jnp.einsum("bkn,bkhp->bhnp", b,
+                           xdt * decay_to_end[..., None])
+        h = h * jnp.exp(cums[:, -1, :])[:, :, None, None] + s_new
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (xc.astype(jnp.float32),
+                                    dtc.astype(jnp.float32),
+                                    Bc.astype(jnp.float32),
+                                    Cc.astype(jnp.float32)))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, Pd)
+    return y + xh.astype(jnp.float32) * Dsk[None, None, :, None]
+
+
+def ssd_reference(xh, dt, A, Bm, Cm, Dsk):
+    """Naive O(S) recurrence oracle (tests): same inputs as _ssd_chunk_scan."""
+    Bsz, S, H, Pd = xh.shape
+
+    def body(h, inp):
+        x, d, b, c = inp
+        da = jnp.exp(d * A)                                # (B,H)
+        h = h * da[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b, x * d[..., None])
+        y = jnp.einsum("bn,bhnp->bhp", c, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, Bm.shape[-1], Pd), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (xh.swapaxes(0, 1).astype(jnp.float32),
+                                    dt.swapaxes(0, 1).astype(jnp.float32),
+                                    Bm.swapaxes(0, 1).astype(jnp.float32),
+                                    Cm.swapaxes(0, 1).astype(jnp.float32)))
+    y = ys.swapaxes(0, 1)
+    return y + xh.astype(jnp.float32) * Dsk[None, None, :, None]
+
+
+def _gated_norm(y, z, scale, eps: float = 1e-6):
+    """RMSNormGated over the flattened (H, P) feature dims."""
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y32 * y32, axis=(-2, -1), keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+
+
+def mamba2_apply(p, h, cfg, ctx: ShardCtx, *, cache=None, use_reference=False):
+    """h: (B, S, D) -> (out, new_cache).  cache: dict(conv, ssm) for decode."""
+    B, S, D = h.shape
+    N, H, Pd = cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = h.astype(cd)
+
+    hp = lambda t: ctx.constrain(t, ctx.batch_spec, None, None, ctx.model)
+    z = hp(jnp.einsum("bsd,dhp->bshp", h, p["w_z"].astype(cd)))
+    x = hp(jnp.einsum("bsd,dhp->bshp", h, p["w_x"].astype(cd)))
+    Bm = ctx.constrain(h @ p["w_B"].astype(cd), ctx.batch_spec, None, None)
+    Cm = ctx.constrain(h @ p["w_C"].astype(cd), ctx.batch_spec, None, None)
+    dt_raw = h @ p["w_dt"].astype(cd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    # §Perf H8: cross the layer boundary in compute dtype (the SSD scan
+    # upcasts internally); keeps the stream-grad all-reduce out of f32
+    dt = ctx.constrain(dt.astype(cd), ctx.batch_spec, None, None)
+    A = -jnp.exp(p["A_log"])
+
+    new_cache = None
+    if cache is None:
+        x, _ = _causal_conv_hp(x, p["conv_x"].astype(cd))
+        xh = hp(jax.nn.silu(x.astype(jnp.float32)).astype(cd))
+        if use_reference:
+            fn = ssd_reference
+        elif ctx.mesh is not None:
+            # §Perf H6: shard_map makes the P-sharding explicit, so the
+            # backward's dM = gy . xdt partial products stay LOCAL and the
+            # psum lands on the small (B,Q,Q)/(B,Q,H) grads after the head
+            # contraction (GSPMD AR'd the full (B,Q,Q,H) tensor per chunk).
+            from jax.sharding import PartitionSpec as P
+            b = ctx.batch_spec
+            m = ctx.model
+
+            def fn(xh_, dt_, A_, Bm_, Cm_, Dsk_):
+                inner = lambda *a: _ssd_chunk_scan(
+                    *a, chunk=min(cfg.ssm_chunk, S))
+                return jax.shard_map(
+                    inner, mesh=ctx.mesh,
+                    in_specs=(P(b, None, None, m), P(b, None, None), P(None),
+                              P(b, None, None), P(b, None, None), P(None)),
+                    out_specs=P(b, None, None, m), check_vma=False)(
+                        xh_, dt_, A_, Bm_, Cm_, Dsk_)
+        else:
+            fn = lambda *a: _ssd_chunk_scan(*a, chunk=min(cfg.ssm_chunk, S))
+        y = hp(fn(xh, dt, A, Bm, Cm, p["D_skip"]))
+    else:
+        xconv, conv_state = _causal_conv_hp(x, p["conv_x"].astype(cd),
+                                            state=cache["conv"])
+        xh = jax.nn.silu(xconv.astype(jnp.float32)).astype(cd)
+        da = jnp.exp(dt[:, 0] * A[None, :])                # (B,H)
+        ssm = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None])
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), ssm)
+        y = (y + xh[:, 0].astype(jnp.float32)
+             * p["D_skip"][None, :, None])[:, None]
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssm": ssm}
+
+    y = _gated_norm(y, z, p["norm"]).astype(cd)            # (B,S,H,P)
+    return jnp.einsum("bshp,hpd->bsd", y, p["w_out"].astype(cd)), new_cache

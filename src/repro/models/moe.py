@@ -1,0 +1,218 @@
+"""Token-choice MoE with argsort dispatch and expert parallelism.
+
+TPU adaptation: instead of GShard's (T, E, C) one-hot dispatch einsum
+(O(T*E*C) memory) we sort token->expert assignments once per layer
+(argsort over T*k elements), bucket them into an (E, C, D) buffer with
+capacity C = ceil(T*k/E * capacity_factor), run a batched per-expert GEMM,
+and scatter-add the results back weighted by router probs.  The (E, ...)
+dims are sharded over the `model` axis (EP); under GSPMD the gather/scatter
+between token-sharded and expert-sharded layouts lowers to all-to-alls.
+
+Aux losses: Switch-style load-balance + router z-loss, returned to the
+caller for weighting into the train loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ShardCtx, dense_init, swiglu
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float, round_to: int = 128) -> int:
+    """round_to=128 for the GSPMD path (the (E, C, D) buffer shards C over
+    the batch axes); the shard_map a2a path uses per-chip-local buffers and
+    rounds to 8 only."""
+    c = int(n_tokens * top_k / n_experts * capacity_factor) + 1
+    return max(round_to, -(-c // round_to) * round_to)
+
+
+def init_moe(rng, cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32, fan_in=D),
+        "w_gate": dense_init(ks[1], (E, D, F), dt, fan_in=D),
+        "w_up": dense_init(ks[2], (E, D, F), dt, fan_in=D),
+        "w_down": dense_init(ks[3], (E, F, D), dt, fan_in=F),
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        p["shared_gate"] = dense_init(ks[4], (D, Fs), dt, fan_in=D)
+        p["shared_up"] = dense_init(ks[5], (D, Fs), dt, fan_in=D)
+        p["shared_down"] = dense_init(
+            jax.random.fold_in(ks[4], 7), (Fs, D), dt, fan_in=Fs)
+    return p
+
+
+def moe_specs(cfg):
+    from jax.sharding import PartitionSpec as P
+    s = {"router": P(None, None),
+         "w_gate": P("model", "data", None),
+         "w_up": P("model", "data", None),
+         "w_down": P("model", None, "data")}
+    if cfg.n_shared_experts:
+        s.update({"shared_gate": P("data", "model"),
+                  "shared_up": P("data", "model"),
+                  "shared_down": P("model", "data")})
+    return s
+
+
+def moe_apply(p, x, cfg, ctx: ShardCtx):
+    """x: (T, D) flat tokens -> (out (T, D), aux dict)."""
+    T, D = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    cd = jnp.dtype(cfg.compute_dtype)
+    C = moe_capacity(T, E, k, cfg.capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                  # (T, k)
+
+    flat_e = top_e.reshape(-1).astype(jnp.int32)            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, stok, sp = flat_e[order], flat_t[order], flat_p[order]
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[se]
+    keep = pos < C
+    posc = jnp.clip(pos, 0, C - 1)
+
+    gathered = x[stok].astype(cd) * keep[:, None].astype(cd)
+    buf = jnp.zeros((E, C, D), cd).at[se, posc].add(gathered)
+    # EP layout: experts over the model axis, per-expert token slots over
+    # the batch axes -- the buffer holds T*k*cf token slots and must not
+    # be replicated within a data shard.
+    buf = ctx.constrain(buf, ctx.model, ctx.batch_spec, None)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(cd))
+    hmid = ctx.constrain(swiglu(g, u), ctx.model, ctx.batch_spec, None)
+    out_e = jnp.einsum("ecf,efd->ecd", hmid, p["w_down"].astype(cd))
+    out_e = ctx.constrain(out_e, ctx.model, ctx.batch_spec, None)
+
+    contrib = out_e[se, posc] * (sp * keep)[:, None].astype(cd)
+    out = jnp.zeros((T, D), cd).at[stok].add(contrib)
+
+    if cfg.n_shared_experts:
+        sh = swiglu(x.astype(cd) @ p["shared_gate"].astype(cd),
+                    x.astype(cd) @ p["shared_up"].astype(cd))
+        out = out + sh @ p["shared_down"].astype(cd)
+
+    # aux: Switch load-balance (f_e * P_e) + z-loss
+    me = jnp.mean(probs, axis=0)                            # mean router prob
+    one_hot_counts = jnp.zeros((E,)).at[flat_e].add(1.0)
+    fe = one_hot_counts / (T * k)
+    aux = {
+        "load_balance": E * jnp.sum(fe * me),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map all-to-all expert parallelism (§Perf hillclimb H1)
+#
+# The GSPMD path above lets the compiler mediate between token-sharded and
+# expert-sharded layouts; measured on the production mesh it replicates the
+# dispatch buffers (EXPERIMENTS.md §Perf).  This path makes the EP pipeline
+# explicit: each chip routes its LOCAL tokens, packs an (E, C_loc, D) send
+# buffer, all-to-alls expert slices across the model axis, runs the local
+# expert GEMMs, and all-to-alls results back -- the only cross-chip traffic
+# is 2x the routed token payload.
+
+
+def _local_dispatch(x_loc, top_e, top_p, E, C_loc, cd):
+    """Pack local tokens into per-expert slots; returns (buf, se, posc,
+    keep, stok, sp)."""
+    Tl, D = x_loc.shape
+    k = top_e.shape[-1]
+    flat_e = top_e.reshape(-1).astype(jnp.int32)
+    flat_t = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, stok, sp = flat_e[order], flat_t[order], flat_p[order]
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+    pos = jnp.arange(Tl * k, dtype=jnp.int32) - starts[se]
+    keep = pos < C_loc
+    posc = jnp.clip(pos, 0, C_loc - 1)
+    gathered = x_loc[stok].astype(cd) * keep[:, None].astype(cd)
+    buf = jnp.zeros((E, C_loc, D), cd).at[se, posc].add(gathered)
+    return buf, se, posc, keep, stok, sp
+
+
+def moe_apply_a2a(p, x, cfg, ctx: ShardCtx):
+    """x: (B, S, D) -> (out, aux).  Requires ctx.mesh; falls back to the
+    GSPMD path on a single device."""
+    if ctx.mesh is None:
+        B, S, D = x.shape
+        out, aux = moe_apply(p, x.reshape(B * S, D), cfg, ctx)
+        return out.reshape(B, S, D), aux
+
+    from jax.sharding import PartitionSpec as P
+    cd = jnp.dtype(cfg.compute_dtype)
+    E, k = cfg.n_experts, cfg.moe_top_k
+    msize = ctx.model_size
+    E_loc = E // msize
+    mesh = ctx.mesh
+    n_chips = mesh.size
+    B, S, D = x.shape
+    T_loc = max(1, (B * S) // n_chips)
+    C_loc = moe_capacity(T_loc, E, k, cfg.capacity_factor, round_to=8)
+
+    def local_fn(router_w, w_gate, w_up, w_down, x_bsd):
+        Bl, Sl, _ = x_bsd.shape
+        x_loc = x_bsd.reshape(Bl * Sl, D)
+        logits = x_loc.astype(jnp.float32) @ router_w      # (Tl, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        send, se, posc, keep, stok, sp = _local_dispatch(
+            x_loc, top_e, top_p, E, C_loc, cd)
+        # (E, C, D) -> (msize, E_loc, C, D) -> exchange over the model axis
+        send = send.reshape(msize, E_loc, C_loc, D)
+        recv = jax.lax.all_to_all(send, ctx.model, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv: (msize, E_loc, C, D), dim0 = source shard
+        hbuf = recv.transpose(1, 0, 2, 3).reshape(E_loc, msize * C_loc, D)
+        g = jnp.einsum("ecd,edf->ecf", hbuf, w_gate.astype(cd))
+        u = jnp.einsum("ecd,edf->ecf", hbuf, w_up.astype(cd))
+        oe = jnp.einsum("ecf,efd->ecd", swiglu(g, u), w_down.astype(cd))
+        back = oe.reshape(E_loc, msize, C_loc, D).transpose(1, 0, 2, 3)
+        ret = jax.lax.all_to_all(back, ctx.model, split_axis=0,
+                                 concat_axis=0, tiled=False)
+        ret = ret.reshape(E, C_loc, D)                     # local slots again
+        contrib = ret[se, posc] * (sp * keep)[:, None].astype(cd)
+        out = jnp.zeros((Bl * Sl, D), cd).at[stok].add(contrib)
+
+        axes = tuple(a for a in mesh.axis_names)
+        me = jnp.mean(probs, axis=0)
+        counts = jnp.zeros((E,)).at[top_e.reshape(-1)].add(1.0)
+        fe = counts / (Bl * Sl * k)
+        lb = E * jnp.sum(jax.lax.pmean(fe, axes) * jax.lax.pmean(me, axes))
+        aux = {"load_balance": lb,
+               "router_z": jax.lax.pmean(
+                   jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2), axes),
+               "dropped_frac": 1.0 - jax.lax.pmean(
+                   jnp.mean(keep.astype(jnp.float32)), axes)}
+        return out.reshape(Bl, Sl, D), aux
+
+    baxes = ctx.batch_spec
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P(ctx.model, None, None), P(ctx.model, None, None),
+                  P(ctx.model, None, None), P(baxes, ctx.model, None)),
+        out_specs=(P(baxes, ctx.model, None),
+                   {"load_balance": P(), "router_z": P(),
+                    "dropped_frac": P()}),
+        check_vma=False)
+    out, aux = fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+
+    if cfg.n_shared_experts:
+        sh = swiglu(x.astype(cd) @ p["shared_gate"].astype(cd),
+                    x.astype(cd) @ p["shared_up"].astype(cd))
+        out = out + sh @ p["shared_down"].astype(cd)
+    return out, aux

@@ -1,0 +1,367 @@
+"""LMModel: embedding + scanned layer stack + loss / decode plumbing.
+
+One class covers all 10 assigned architectures, dispatching on
+``cfg.family``:
+
+  dense / vlm / audio : scan over dense GQA blocks
+  gemma2              : scan over (local, global) pairs, sandwich norms
+  moe                 : scan over MoE blocks (+ optional dense first layer)
+  ssm                 : scan over Mamba2 blocks
+  hybrid              : scan over Zamba2 super-blocks with a shared attn block
+
+Layers are stacked (leading L dim) and applied with ``lax.scan`` so the HLO
+stays one-layer-sized; ``cfg.remat`` wraps the scan body in
+``jax.checkpoint`` (nothing saved but the carry).  The residual-stream carry
+is sharding-constrained to (batch, model-on-S, None) -- Megatron-style
+sequence parallelism for saved activations.
+
+Modality stubs per assignment: ``input_mode='embeds'`` (musicgen) consumes
+precomputed frame embeddings; chameleon's VQ image tokens live inside its
+65536-entry vocab so it stays token-mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as B
+from repro.models.common import (NO_SHARD, ShardCtx, cross_entropy_chunked,
+                                 embed_init, rms_norm)
+
+
+def _stack_specs(spec_tree, n_lead: int = 1):
+    return jax.tree.map(lambda s: P(*([None] * n_lead), *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+class LMModel:
+    def __init__(self, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+        self.cfg = cfg
+        self.ctx = ctx
+        fam = cfg.family
+        if fam == "gemma2":
+            assert cfg.n_layers % 2 == 0
+            self.n_stack = cfg.n_layers // 2
+            self._init_block = B.init_gemma_pair
+            self._block_specs = B.gemma_pair_specs
+            self._apply_block = B.gemma_pair_apply
+        elif fam == "moe":
+            self.n_stack = cfg.n_layers - (1 if cfg.moe_dense_first else 0)
+            self._init_block = B.init_moe_block
+            self._block_specs = B.moe_block_specs
+            self._apply_block = B.moe_block_apply
+        elif fam == "ssm":
+            self.n_stack = cfg.n_layers
+            self._init_block = B.init_mamba_block
+            self._block_specs = B.mamba_block_specs
+            self._apply_block = B.mamba_block_apply
+        elif fam == "hybrid":
+            assert cfg.n_layers % cfg.shared_attn_every == 0
+            self.n_stack = cfg.n_layers // cfg.shared_attn_every
+            self._init_block = B.init_zamba_super
+            self._block_specs = B.zamba_super_specs
+            self._apply_block = None      # special-cased (shared params)
+        else:                             # dense / vlm / audio
+            self.n_stack = cfg.n_layers
+            self._init_block = B.init_dense_block
+            self._block_specs = B.dense_block_specs
+            self._apply_block = B.dense_block_apply
+
+    # ------------------------------------------------------------------
+    # Parameters
+
+    def init_params(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 8)
+        p: Dict[str, Any] = {}
+        if cfg.input_mode == "tokens":
+            p["embed"] = embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt)
+        layer_rngs = jnp.stack(jax.random.split(ks[1], self.n_stack))
+        p["blocks"] = jax.vmap(lambda r: self._init_block(r, cfg))(layer_rngs)
+        if cfg.family == "hybrid":
+            p["shared"] = B.init_dense_block(ks[2], cfg)
+        if cfg.family == "moe" and cfg.moe_dense_first:
+            p["first"] = B.init_moe_block(ks[3], cfg, dense_ffn=True)
+        p["final_norm"] = jnp.zeros((cfg.d_model,), dt) + (
+            0.0 if cfg.norm_plus_one else 1.0)
+        if not cfg.tie_embeddings or cfg.input_mode == "embeds":
+            p["lm_head"] = embed_init(ks[4], (cfg.d_model, cfg.vocab_size),
+                                      dt) * cfg.d_model ** -0.5
+        return p
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {}
+        if cfg.input_mode == "tokens":
+            s["embed"] = P("model", "data")
+        s["blocks"] = _stack_specs(self._block_specs(cfg))
+        if cfg.family == "hybrid":
+            s["shared"] = B.dense_block_specs(cfg)
+        if cfg.family == "moe" and cfg.moe_dense_first:
+            s["first"] = B.moe_block_specs(cfg, dense_ffn=True)
+        s["final_norm"] = P(None)
+        if not cfg.tie_embeddings or cfg.input_mode == "embeds":
+            s["lm_head"] = P("data", "model")
+        return s
+
+    # ------------------------------------------------------------------
+    # Forward
+
+    def _embed_in(self, p, inputs):
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        if cfg.input_mode == "tokens":
+            h = p["embed"][inputs].astype(cd)
+        else:
+            h = inputs.astype(cd)
+        if cfg.scale_embeddings:
+            h = h * jnp.asarray(cfg.d_model ** 0.5, cd)
+        return h
+
+    def _logits_fn(self, p):
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        head = (p["embed"].T if (cfg.tie_embeddings
+                                 and cfg.input_mode == "tokens"
+                                 and "lm_head" not in p)
+                else p["lm_head"])
+        return lambda h: h.astype(cd) @ head.astype(cd)
+
+    def _constrain_stream(self, h):
+        # sequence parallelism: saved residual stream is model-sharded on S.
+        # ssm/hybrid streams keep S unsharded (the SSD chunk scan slices S;
+        # the mixer shards its head-feature dim over the model axis instead).
+        if h.shape[1] >= 2 and self.cfg.family not in ("ssm", "hybrid"):
+            return self.ctx.constrain(h, self.ctx.batch_spec, self.ctx.model,
+                                      None)
+        return self.ctx.constrain(h, self.ctx.batch_spec, None, None)
+
+    def _fsdp_gather(self, bp, specs):
+        """ZeRO-3: transiently all-gather block weights over the data/pod
+        axes (storage stays fully sharded); the model-axis TP sharding is
+        kept.  Pinning this stops GSPMD from turning data-sharded
+        contractions into huge activation all-reduces."""
+        ctx = self.ctx
+        if ctx.mesh is None:
+            return bp
+
+        drop = {"data", "pod"}
+        if ctx.model is None:            # pure-DP: weights gather fully
+            drop = drop | {"model"}
+
+        def drop_data(entry):
+            if entry is None:
+                return None
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            keep = tuple(a for a in axes if a not in drop)
+            return keep if len(keep) > 1 else (keep[0] if keep else None)
+
+        def one(spec, w):
+            return ctx.constrain(w, *[drop_data(e) for e in spec])
+
+        from jax.sharding import PartitionSpec as PS
+        return jax.tree.map(one, specs, bp,
+                            is_leaf=lambda x: isinstance(x, PS))
+
+    def _run_stack(self, p, h, *, positions=None, cache=None, cur_len=None):
+        cfg, ctx = self.cfg, self.ctx
+        decode = cache is not None
+        block_specs = self._block_specs(cfg)
+
+        if cfg.family == "hybrid":
+            shared_gathered = self._fsdp_gather(
+                p["shared"], B.dense_block_specs(cfg))
+
+            def body(carry, xs):
+                hh = self._constrain_stream(carry)
+                bp, bc = xs
+                bp = self._fsdp_gather(bp, block_specs)
+                hh, nc, aux = B.zamba_super_apply(
+                    bp, shared_gathered, hh, cfg, ctx, positions=positions,
+                    cache=bc, cur_len=cur_len)
+                return hh, (nc, aux)
+        elif cfg.family == "moe":
+            def body(carry, xs):
+                hh = self._constrain_stream(carry)
+                bp, bc = xs
+                bp = self._fsdp_gather(bp, block_specs)
+                hh, nc, aux = B.moe_block_apply(
+                    bp, hh, cfg, ctx, positions=positions, cache=bc,
+                    cur_len=cur_len)
+                return hh, (nc, aux)
+        else:
+            apply_block = self._apply_block
+
+            def body(carry, xs):
+                hh = self._constrain_stream(carry)
+                bp, bc = xs
+                bp = self._fsdp_gather(bp, block_specs)
+                hh, nc, aux = apply_block(bp, hh, cfg, ctx,
+                                          positions=positions, cache=bc,
+                                          cur_len=cur_len)
+                return hh, (nc, aux)
+
+        if cfg.remat and not decode and cfg.remat_policy != "none":
+            policy = {
+                "nothing": jax.checkpoint_policies.nothing_saveable,
+                "dots_no_batch":
+                    jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            }[cfg.remat_policy]
+            body = jax.checkpoint(body, policy=policy)
+
+        aux0 = None
+        new_first = None
+        if cfg.family == "moe" and cfg.moe_dense_first:
+            fc = cache["first"] if decode else None
+            h, new_first, aux0 = B.moe_block_apply(
+                p["first"], h, cfg, ctx, positions=positions, cache=fc,
+                cur_len=cur_len, dense_ffn=True)
+
+        blocks_cache = (cache["blocks"] if decode else None)
+        h, (new_blocks, auxs) = jax.lax.scan(body, h,
+                                             (p["blocks"], blocks_cache))
+        aux = jax.tree.map(lambda a: jnp.mean(a), auxs)
+        if aux0 is not None:
+            pass  # dense first layer has zero aux
+        new_cache = None
+        if decode:
+            new_cache = dict(cache)
+            new_cache["blocks"] = new_blocks
+            if new_first is not None:
+                new_cache["first"] = new_first
+        return h, new_cache, aux
+
+    def hidden_states(self, p, inputs):
+        """Final (pre-head) hidden states -- used by embed_latents."""
+        h = self._embed_in(p, inputs)
+        S = h.shape[1]
+        positions = jnp.arange(S)[None, :]
+        h, _, _ = self._run_stack(p, h, positions=positions)
+        return rms_norm(h, p["final_norm"], plus_one=self.cfg.norm_plus_one)
+
+    def apply_train(self, p, inputs, labels, valid=None):
+        """Causal-LM loss (alias of loss_and_aux)."""
+        return self.loss_and_aux(p, inputs, labels, valid=valid)
+
+    def loss_and_aux(self, p, inputs, labels, valid=None):
+        """Train loss including MoE aux terms (the train_step entry point)."""
+        cfg = self.cfg
+        h = self._embed_in(p, inputs)
+        S = h.shape[1]
+        positions = jnp.arange(S)[None, :]
+        h, _, aux = self._run_stack(p, h, positions=positions)
+        h = rms_norm(h, p["final_norm"], plus_one=cfg.norm_plus_one)
+        h = self._constrain_stream(h)
+        nll, n_tok = cross_entropy_chunked(
+            self._logits_fn(p), h, labels, n_chunks=cfg.logits_chunks,
+            final_softcap=cfg.final_softcap, valid=valid)
+        total = nll
+        if cfg.is_moe:
+            total = total + cfg.router_aux_weight * aux["load_balance"] \
+                + cfg.router_z_weight * aux["router_z"]
+        metrics = {"nll": nll, "tokens": n_tok, **aux}
+        return total, metrics
+
+    # ------------------------------------------------------------------
+    # Serving
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+
+        def kv(n_lead=()):
+            shape = (*n_lead, batch, max_len, cfg.n_kv_heads,
+                     cfg.resolved_head_dim)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+        def mamba(n_lead=()):
+            return {"conv": jnp.zeros((*n_lead, batch, cfg.ssm_conv - 1,
+                                       cfg.ssm_nheads, cfg.ssm_headdim),
+                                      dtype),
+                    "ssm": jnp.zeros((*n_lead, batch, cfg.ssm_nheads,
+                                      cfg.ssm_state, cfg.ssm_headdim),
+                                     jnp.float32)}
+
+        L = self.n_stack
+        if cfg.family == "gemma2":
+            blocks = {"local": kv((L,)), "global": kv((L,))}
+        elif cfg.family == "moe" and cfg.is_mla:
+            blocks = {"latent": jnp.zeros((L, batch, max_len,
+                                           cfg.kv_lora_rank), dtype),
+                      "k_rope": jnp.zeros((L, batch, max_len,
+                                           cfg.q_rope_dim), dtype)}
+        elif cfg.family == "moe":
+            blocks = kv((L,))
+        elif cfg.family == "ssm":
+            blocks = mamba((L,))
+        elif cfg.family == "hybrid":
+            blocks = {"mamba": mamba((L, cfg.shared_attn_every)),
+                      "attn": kv((L,))}
+        else:
+            blocks = kv((L,))
+        cache = {"blocks": blocks}
+        if cfg.family == "moe" and cfg.moe_dense_first:
+            if cfg.is_mla:
+                cache["first"] = {
+                    "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank),
+                                        dtype),
+                    "k_rope": jnp.zeros((batch, max_len, cfg.q_rope_dim),
+                                        dtype)}
+            else:
+                cache["first"] = kv()
+        return cache
+
+    def cache_specs(self):
+        """PartitionSpec tree matching init_cache: batch->data axes, cache
+        sequence dim -> model axis (flash-decoding split-K under GSPMD)."""
+        cfg = self.cfg
+        b = self.ctx.batch_spec
+        m = self.ctx.model
+
+        def kv(n_lead: int):
+            lead = (None,) * n_lead
+            s = P(*lead, b, m, None, None)
+            return {"k": s, "v": s}
+
+        def mamba(n_lead: int):
+            # SSD state shards over the head-feature dim P (= 64: divides
+            # the model axis for every assigned ssm arch; H need not)
+            lead = (None,) * n_lead
+            return {"conv": P(*lead, b, None, None, m),
+                    "ssm": P(*lead, b, None, None, m)}
+
+        if cfg.family == "gemma2":
+            blocks = {"local": kv(1), "global": kv(1)}
+        elif cfg.family == "moe" and cfg.is_mla:
+            blocks = {"latent": P(None, b, m, None),
+                      "k_rope": P(None, b, m, None)}
+        elif cfg.family == "ssm":
+            blocks = mamba(1)
+        elif cfg.family == "hybrid":
+            blocks = {"mamba": mamba(2), "attn": kv(1)}
+        else:
+            blocks = kv(1)
+        cache = {"blocks": blocks}
+        if cfg.family == "moe" and cfg.moe_dense_first:
+            cache["first"] = ({"latent": P(b, m, None),
+                               "k_rope": P(b, m, None)} if cfg.is_mla
+                              else {"k": P(b, m, None, None),
+                                    "v": P(b, m, None, None)})
+        return cache
+
+    def serve_step(self, p, cache, inputs, cur_len):
+        """One decode step.  inputs: (B, 1) tokens or (B, 1, D) embeds;
+        cur_len: () int32 length including the new token."""
+        h = self._embed_in(p, inputs)
+        h, new_cache, _ = self._run_stack(p, h, cache=cache, cur_len=cur_len)
+        h = rms_norm(h, p["final_norm"], plus_one=self.cfg.norm_plus_one)
+        logits = self._logits_fn(p)(h)
+        if self.cfg.final_softcap:
+            logits = self.cfg.final_softcap * jnp.tanh(
+                logits.astype(jnp.float32) / self.cfg.final_softcap)
+        return logits, new_cache

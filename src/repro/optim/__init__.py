@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, sgdm, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import warmup_cosine, constant  # noqa: F401

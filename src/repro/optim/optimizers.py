@@ -1,0 +1,130 @@
+"""Optimisers as (init, update) pairs over arbitrary param pytrees.
+
+- ``adamw``: decoupled weight decay; ``moment_dtype='int8'`` stores m/v as
+  blockwise-quantised QTensors (8-bit Adam) for the >30B assigned archs.
+- ``sgdm``: momentum SGD (ablations / NE experiments).
+- ``clip_by_global_norm``: standard pre-update gradient clip.
+
+All state leaves are plain arrays / QTensors so the checkpointer and the
+dry-run sharding logic treat them uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized import QTensor, dequantize, quantize
+
+ScheduleOrFloat = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: ScheduleOrFloat, count):
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(
+        g.dtype), grads), gn
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(lr: ScheduleOrFloat, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          moment_dtype: str = "float32") -> Optimizer:
+    quant = moment_dtype == "int8"
+
+    def enc(x):
+        return quantize(x) if quant else x
+
+    def dec(x):
+        return dequantize(x) if quant else x.astype(jnp.float32)
+
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: enc(jnp.zeros(p.shape, jnp.float32)), params)
+        zeros2 = jax.tree.map(
+            lambda p: enc(jnp.zeros(p.shape, jnp.float32)), params)
+        return AdamWState(count=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+    def update(grads, state: AdamWState, params):
+        count = state.count + 1
+        lr_t = _lr_at(lr, count)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        is_q = lambda x: isinstance(x, QTensor)
+
+        def upd(g, m_old, v_old, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * dec(m_old) + (1.0 - b1) * g32
+            v = b2 * dec(v_old) + (1.0 - b2) * g32 * g32
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * step).astype(p.dtype)
+            return newp, enc(m), enc(v)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params,
+                           is_leaf=lambda x: is_q(x) or x is None)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 3 and not is_q(x))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 3 and not is_q(x))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 3 and not is_q(x))
+        return newp, AdamWState(count=count, m=newm, v=newv)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDMState(NamedTuple):
+    count: jnp.ndarray
+    mom: Any
+
+
+def sgdm(lr: ScheduleOrFloat, *, momentum: float = 0.9,
+         nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return SGDMState(count=jnp.zeros((), jnp.int32),
+                         mom=jax.tree.map(
+                             lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+
+    def update(grads, state: SGDMState, params):
+        count = state.count + 1
+        lr_t = _lr_at(lr, count)
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            m = momentum * m + g32
+            step = g32 + momentum * m if nesterov else m
+            return (p.astype(jnp.float32) - lr_t * step).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state.mom, params)
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return newp, SGDMState(count=count, mom=newm)
+
+    return Optimizer(init=init, update=update)

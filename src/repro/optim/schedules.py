@@ -1,0 +1,28 @@
+"""Learning-rate schedules (count -> lr, 1-indexed step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        t = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return fn
+
+
+def linear_decay(peak_lr: float, total_steps: int):
+    def fn(count):
+        t = jnp.clip(count.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return peak_lr * (1.0 - t)
+    return fn

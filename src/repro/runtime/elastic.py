@@ -1,0 +1,38 @@
+"""Elastic scaling: rebuild the mesh after membership changes and re-shard.
+
+Flow on failure/resize (pod granularity -- the DCN axis is pure DP so pods
+are the natural elasticity unit):
+  1. the launcher detects a dead pod (heartbeat / straggler alarm),
+  2. survivors quiesce, the last committed checkpoint is the truth,
+  3. ``remesh()`` builds a mesh over the remaining devices (dropping the
+     pod axis or shrinking it),
+  4. ``Checkpointer.restore(..., shardings=new)`` re-lays-out the state,
+  5. the data cursor advances with the *new* global batch mapping.
+
+Checkpoints store unsharded arrays, so any (old mesh -> new mesh) pair
+works; there is no resharding converter to maintain.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import AxisType
+
+
+def remesh(n_devices: int, *, model: int = 16, axis_names=("data", "model")):
+    """Largest (data, model) mesh fitting n_devices with fixed TP width."""
+    if n_devices < model:
+        model = n_devices
+    data = n_devices // model
+    devices = jax.devices()[: data * model]
+    import numpy as np
+    arr = np.array(devices).reshape(data, model)
+    return jax.sharding.Mesh(
+        arr, axis_names,
+        axis_types=(AxisType.Auto,) * len(axis_names))
+
+
+def surviving_pods(heartbeats: dict, timeout_s: float, now: float) -> list:
+    """Pod ids whose last heartbeat is fresh."""
+    return [p for p, t in sorted(heartbeats.items()) if now - t <= timeout_s]

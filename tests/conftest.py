@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests and benches must see exactly 1 device (the dry-run sets its own
+# XLA_FLAGS); keep any user flags but never force a device count here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,144 @@
+"""Multi-device integration tests (subprocess: 8 fake CPU devices).
+
+XLA locks the device count at first jax init, so these run in fresh
+subprocesses with XLA_FLAGS set; the parent pytest process keeps 1 device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_funcsne_distributed_step_improves_knn():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from repro.data.synthetic import blobs
+        from repro.core import funcsne
+        from repro.core.quality import knn_set_quality
+
+        X, _ = blobs(n=512, dim=16, n_centers=5, center_std=6.0)
+        Xj = jnp.asarray(X)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        cfg = funcsne.FuncSNEConfig(n_points=512, dim_hd=16)
+        st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+        q0 = float(knn_set_quality(st.hd_idx, Xj))
+        step, _ = funcsne.make_distributed_step(cfg, mesh)
+        Xs = jax.device_put(Xj, NamedSharding(mesh, P(None, "model")))
+        st = jax.device_put(st, NamedSharding(mesh, P()))
+        hp = funcsne.default_hparams(512)
+        for _ in range(150):
+            st = step(st, Xs, hp)
+        q1 = float(knn_set_quality(st.hd_idx, Xj))
+        assert q1 > max(q0 + 0.2, 0.8), (q0, q1)
+        assert bool(jnp.isfinite(st.Y).all())
+        print("OK", q0, "->", q1)
+    """)
+    assert "OK" in out
+
+
+def test_lm_train_step_compiles_and_runs_on_mesh():
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from repro.configs.base import get_arch, smoke_variant
+        from repro.launch.mesh import sanitize_spec, tree_shardings
+        from repro.launch.steps import (batch_struct, make_model,
+                                        make_optimizer, make_train_step)
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        cfg = dataclasses.replace(smoke_variant(get_arch("olmoe-1b-7b")),
+                                  attn_chunk_k=64)
+        model = make_model(cfg, mesh)
+        opt = make_optimizer(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        p_sh = tree_shardings(mesh, model.param_specs(),
+                              jax.eval_shape(lambda: params))
+        params = jax.device_put(params, p_sh)
+        step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+        x = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0,
+                               cfg.vocab_size)
+        batch = {"inputs": x, "labels": x}
+        p2, o2, metrics = step(params, opt_state, batch)
+        loss0 = float(metrics["loss"])
+        for i in range(3):
+            p2, o2, metrics = step(p2, o2, batch)
+        assert float(metrics["loss"]) < loss0
+        print("OK", loss0, "->", float(metrics["loss"]))
+    """)
+    assert "OK" in out
+
+
+def test_checkpoint_elastic_reshard():
+    out = _run("""
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from repro.checkpoint import Checkpointer
+
+        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2)
+        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
+                              axis_types=(AxisType.Auto,) * 2,
+                              devices=jax.devices()[:4])
+        t = {"w": jax.device_put(jnp.arange(64, dtype=jnp.float32)
+                                 .reshape(8, 8),
+                                 NamedSharding(mesh8, P("data", "model")))}
+        d = tempfile.mkdtemp()
+        ck = Checkpointer(d)
+        ck.save(1, t, blocking=True)
+        got, _ = ck.restore(jax.tree.map(jnp.zeros_like, t),
+                            shardings={"w": NamedSharding(
+                                mesh4, P("data", "model"))})
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(t["w"]))
+        assert got["w"].sharding.mesh.devices.size == 4
+        print("OK elastic reshard 8 -> 4 devices")
+    """)
+    assert "OK" in out
+
+
+def test_multipod_gradient_compression_psum():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import AxisType
+        from repro.optim.compression import (compress_with_error_feedback,
+                                             init_ef)
+        mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                             axis_types=(AxisType.Auto,) * 2)
+
+        def allreduce_compressed(g, ef):
+            sparse, ef, dens = compress_with_error_feedback(
+                {"g": g}, ef, k_frac=0.25)
+            summed = jax.lax.psum(sparse["g"], "pod")
+            return summed, ef
+
+        f = jax.shard_map(
+            lambda g, r: (jax.lax.psum(g, "pod"), r),
+            mesh=mesh, in_specs=(jax.sharding.PartitionSpec("pod"),
+                                 jax.sharding.PartitionSpec()),
+            out_specs=(jax.sharding.PartitionSpec(),
+                       jax.sharding.PartitionSpec()), check_vma=False)
+        g = jnp.arange(16, dtype=jnp.float32).reshape(2, 8)
+        s, _ = f(g, jnp.zeros((8,)))
+        np.testing.assert_allclose(np.asarray(s).reshape(-1),
+                                   np.asarray(g.sum(0)))
+        print("OK pod-axis psum")
+    """)
+    assert "OK" in out

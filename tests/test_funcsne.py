@@ -1,0 +1,162 @@
+"""FUnc-SNE behaviour: force correctness vs the exact gradient, joint KNN
+convergence, dynamic datasets, interactive hyperparameters."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import affinities, baselines, funcsne
+from repro.core.knn import exact_knn
+from repro.core.quality import embedding_quality, knn_set_quality
+from repro.data.synthetic import blobs
+
+
+def _full_state(X, alpha=1.0, k=None, seed=0):
+    n, m = X.shape
+    k = k or n - 1
+    cfg = funcsne.FuncSNEConfig(n_points=n, dim_hd=m, dim_ld=2, k_hd=k,
+                                k_ld=k, n_negatives=4)
+    st = funcsne.init_state(jax.random.PRNGKey(seed), X, cfg, init="random")
+    hd_idx, hd_d = exact_knn(X, k)
+    st = st._replace(hd_idx=hd_idx, hd_d=hd_d,
+                     beta=affinities.solve_beta(hd_d, 30.0),
+                     new_flag=jnp.zeros((n,), bool))
+    ld_idx, ld_d = exact_knn(st.Y, k)
+    return cfg, st._replace(ld_idx=ld_idx, ld_d=ld_d)
+
+
+def test_forces_match_exact_gradient_direction():
+    """With full neighbour sets, one FUnc-SNE force step must align with
+    the exact Eq. 5 gradient (validates the three-term decomposition)."""
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(48, 6))
+                    .astype(np.float32)) * 2.0
+    cfg, st = _full_state(X)
+    hp = funcsne.default_hparams(48, lr=1.0, momentum=0.0)
+    st2 = funcsne._forces_update(cfg, st, hp, jax.random.PRNGKey(1),
+                                 funcsne.AxisCtx())
+    dY = np.asarray(st2.Y - st.Y).ravel()
+    P = baselines.exact_p_matrix(X, 30.0)
+    g = np.asarray(baselines.exact_tsne_grad(st.Y, P, 1.0)).ravel()
+    cos = dY @ (-g) / (np.linalg.norm(dY) * np.linalg.norm(g))
+    assert cos > 0.9, cos
+
+
+@pytest.mark.parametrize("alpha", [0.5, 1.0, 2.0])
+def test_z_estimator_unbiased(alpha):
+    from repro.core.ld_kernels import pairwise_sqdists_full, w_tail
+    X = jnp.asarray(np.random.default_rng(1).normal(size=(64, 6))
+                    .astype(np.float32))
+    cfg, st = _full_state(X)
+    st = st._replace(Y=jax.random.normal(jax.random.PRNGKey(2), (64, 2)))
+    ld_idx, ld_d = exact_knn(st.Y, 63)
+    st = st._replace(ld_idx=ld_idx, ld_d=ld_d)
+    hp = funcsne.default_hparams(64)._replace(alpha=jnp.float32(alpha))
+    st2 = funcsne._forces_update(cfg, st, hp, jax.random.PRNGKey(3),
+                                 funcsne.AxisCtx())
+    d2 = pairwise_sqdists_full(st.Y)
+    z_true = float(jnp.sum(w_tail(d2, alpha) * (1 - jnp.eye(64))))
+    assert abs(float(st2.zhat) - z_true) / z_true < 0.25
+
+
+def test_fit_blobs_quality_and_knn():
+    X, labels = blobs(n=600, dim=16, n_centers=5, center_std=6.0, seed=0)
+    hp = funcsne.default_hparams(600, perplexity=10.0)
+    st, _ = funcsne.fit(X, n_iter=350, hparams=hp)
+    assert float(knn_set_quality(st.hd_idx, jnp.asarray(X))) > 0.9
+    assert float(embedding_quality(jnp.asarray(X), st.Y)) > 0.15
+    assert bool(jnp.isfinite(st.Y).all())
+
+
+def test_feedback_loop_beats_frozen_embedding():
+    """Paper Fig. 4: co-optimised embedding accelerates HD KNN discovery."""
+    X, _ = blobs(n=500, dim=24, n_centers=8, center_std=6.0, seed=1)
+    Xj = jnp.asarray(X)
+    cfg = funcsne.FuncSNEConfig(n_points=500, dim_hd=24, c_hd_rand=1,
+                                c_hd_non=2)
+    hp = funcsne.default_hparams(500, perplexity=10.0)
+
+    def run(frozen):
+        st = funcsne.init_state(jax.random.PRNGKey(2), Xj, cfg)
+        step = funcsne.make_step(cfg)
+        y0 = jnp.array(st.Y, copy=True)    # step donates the state
+        for it in range(120):
+            st = step(st, Xj, hp)
+            if frozen:
+                st = st._replace(Y=jnp.array(y0, copy=True),
+                                 vel=jnp.zeros_like(st.vel))
+        return float(knn_set_quality(st.hd_idx, Xj))
+
+    q_live = run(frozen=False)
+    q_frozen = run(frozen=True)
+    assert q_live >= q_frozen - 0.02, (q_live, q_frozen)
+
+
+def test_dynamic_add_points():
+    X, _ = blobs(n=300, dim=8, n_centers=3, center_std=5.0, seed=2)
+    Xj = jnp.asarray(X)
+    cfg = funcsne.FuncSNEConfig(n_points=300, dim_hd=8)
+    active0 = jnp.arange(300) < 200
+    st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg, active=active0)
+    step = funcsne.make_step(cfg)
+    hp = funcsne.default_hparams(300)
+    for it in range(60):
+        st = step(st, Xj, hp)
+    # activate the held-out 100 points mid-run: no recompile, no stall
+    st = funcsne.add_points(st, jnp.arange(200, 300), jax.random.PRNGKey(5))
+    for it in range(120):
+        st = step(st, Xj, hp)
+    # new points must have found real HD neighbours
+    assert bool(jnp.isfinite(st.Y).all())
+    assert float(st.hd_d[200:][jnp.isfinite(st.hd_d[200:])].mean()) > 0
+    new_deg = np.asarray(jnp.isfinite(st.hd_d[200:]).sum(1))
+    assert (new_deg >= cfg.k_hd // 2).all()
+
+
+def test_remove_points_stops_their_influence():
+    X, _ = blobs(n=200, dim=8, seed=3)
+    cfg = funcsne.FuncSNEConfig(n_points=200, dim_hd=8)
+    st = funcsne.init_state(jax.random.PRNGKey(0), jnp.asarray(X), cfg)
+    st = funcsne.remove_points(st, jnp.arange(100, 200))
+    step = funcsne.make_step(cfg)
+    hp = funcsne.default_hparams(200)
+    y_before = st.Y[100:]
+    for it in range(30):
+        st = step(st, jnp.asarray(X), hp)
+    np.testing.assert_array_equal(np.asarray(st.Y[100:]),
+                                  np.asarray(y_before))
+
+
+def test_interactive_hparams_no_recompile():
+    """alpha/perplexity/ratios are traced: changing them reuses the same
+    compiled step (the paper's instant-feedback property)."""
+    X, _ = blobs(n=256, dim=8, seed=4)
+    cfg = funcsne.FuncSNEConfig(n_points=256, dim_hd=8)
+    st = funcsne.init_state(jax.random.PRNGKey(0), jnp.asarray(X), cfg)
+    step = funcsne.make_step(cfg)
+    hp = funcsne.default_hparams(256)
+    st = step(st, jnp.asarray(X), hp)          # compile once
+    with jax.log_compiles():
+        import logging
+        records = []
+        handler = logging.Handler()
+        handler.emit = lambda r: records.append(r)
+        logging.getLogger("jax._src.dispatch").addHandler(handler)
+        for alpha in (0.4, 0.7, 1.5, 3.0):
+            st = step(st, jnp.asarray(X),
+                      hp._replace(alpha=jnp.float32(alpha),
+                                  perplexity=jnp.float32(5 + alpha)))
+        logging.getLogger("jax._src.dispatch").removeHandler(handler)
+    assert not any("Compiling" in str(r.getMessage()) for r in records)
+    assert bool(jnp.isfinite(st.Y).all())
+
+
+def test_rescale_embedding():
+    X, _ = blobs(n=128, dim=8, seed=5)
+    cfg = funcsne.FuncSNEConfig(n_points=128, dim_hd=8)
+    st = funcsne.init_state(jax.random.PRNGKey(0), jnp.asarray(X), cfg)
+    st = st._replace(Y=st.Y * 1e4)
+    st2 = funcsne.rescale_embedding(st, 1e-2)
+    np.testing.assert_allclose(np.asarray(st2.Y), np.asarray(st.Y) * 1e-2)
+    assert float(jnp.abs(st2.vel).max()) == 0.0

@@ -1,0 +1,98 @@
+"""Per-kernel interpret-mode validation vs the pure-jnp oracles:
+shape/dtype sweeps + hypothesis property checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ne_forces.kernel import ne_forces_pallas
+from repro.kernels.ne_forces.ref import ne_forces_ref
+from repro.kernels.pairwise_sqdist.kernel import pairwise_sqdist_pallas
+from repro.kernels.pairwise_sqdist.ref import pairwise_sqdist_ref
+
+
+@pytest.mark.parametrize("b,c,m", [(8, 4, 16), (37, 11, 19), (64, 16, 128),
+                                   (130, 3, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_sqdist_sweep(b, c, m, dtype):
+    rng = np.random.default_rng(b * 100 + c)
+    q = jnp.asarray(rng.normal(size=(b, m)), dtype)
+    cands = jnp.asarray(rng.normal(size=(b, c, m)), dtype)
+    got = pairwise_sqdist_pallas(q, cands, interpret=True)
+    want = pairwise_sqdist_ref(q, cands)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * m)
+
+
+@pytest.mark.parametrize("b,k,d", [(8, 4, 2), (33, 9, 4), (64, 32, 16)])
+@pytest.mark.parametrize("mode", ["attraction", "repulsion"])
+@pytest.mark.parametrize("alpha", [0.4, 1.0, 3.0])
+def test_ne_forces_sweep(b, k, d, mode, alpha):
+    rng = np.random.default_rng(b + k)
+    y = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    nbr = jnp.asarray(rng.normal(size=(b, k, d)).astype(np.float32))
+    coef = jnp.asarray(rng.random((b, k)).astype(np.float32))
+    got = ne_forces_pallas(y, nbr, coef, alpha, mode=mode, interpret=True)
+    want = ne_forces_ref(y, nbr, coef, alpha, mode=mode)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_ne_forces_action_reaction():
+    """Aggregated force equals the sum of edge forces (Newton pairs)."""
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))
+    nbr = jnp.asarray(rng.normal(size=(16, 5, 3)).astype(np.float32))
+    coef = jnp.ones((16, 5), jnp.float32)
+    agg, edge, _ = ne_forces_ref(y, nbr, coef, 0.8, mode="repulsion")
+    np.testing.assert_allclose(np.asarray(agg),
+                               np.asarray(jnp.sum(edge, axis=1)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("s,d,hq,hkv", [(64, 32, 4, 2), (96, 64, 8, 8),
+                                        (128, 32, 6, 1)])
+@pytest.mark.parametrize("opts", [{}, {"softcap": 10.0}, {"window": 23},
+                                  {"softcap": 5.0, "window": 17}])
+def test_flash_attention_sweep(s, d, hq, hkv, opts):
+    rng = np.random.default_rng(s + hq)
+    q = jnp.asarray(rng.normal(size=(2, hq, s, d)).astype(np.float32)) * 0.4
+    k = jnp.asarray(rng.normal(size=(2, hkv, s, d)).astype(np.float32)) * 0.4
+    v = jnp.asarray(rng.normal(size=(2, hkv, s, d)).astype(np.float32))
+    got = flash_attention_pallas(q, k, v, block_q=32, block_k=32,
+                                 interpret=True, **opts)
+    want = flash_attention_ref(q, k, v, **opts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 32)), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, block_q=32, block_k=32,
+                                 interpret=True)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 40), c=st.integers(1, 12), m=st.integers(1, 48),
+       scale=st.floats(0.1, 10.0))
+def test_sqdist_properties(b, c, m, scale):
+    """Non-negativity, exact zero on identical points, scale law."""
+    rng = np.random.default_rng(b * 7 + c)
+    q = jnp.asarray(rng.normal(size=(b, m)).astype(np.float32)) * scale
+    cands = jnp.repeat(q[:, None, :], c, axis=1)
+    d = pairwise_sqdist_pallas(q, cands, interpret=True)
+    np.testing.assert_allclose(np.asarray(d), 0.0, atol=1e-4 * scale ** 2)
+    other = jnp.asarray(rng.normal(size=(b, c, m)).astype(np.float32))
+    d2 = pairwise_sqdist_pallas(q, other, interpret=True)
+    assert bool(jnp.all(d2 >= 0.0))

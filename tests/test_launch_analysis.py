@@ -1,0 +1,123 @@
+"""Dry-run machinery units: HLO analyzer trip counting, spec sanitisation,
+roofline math, collective parsing (fixed HLO snippets)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import roofline as rl
+from repro.launch.hlo_analysis import analyze, parse_module
+from repro.launch.mesh import sanitize_spec
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    x = jnp.zeros((256,), jnp.float32)
+    Ws = jnp.zeros((6, 256, 256))
+
+    def f(x, Ws):
+        def body(c, W):
+            return jnp.tanh(W @ c), None
+        return jax.lax.scan(body, x, Ws)[0]
+
+    txt = jax.jit(f).lower(x, Ws).compile().as_text()
+    mc = analyze(txt)
+    assert mc.dot_flops == pytest.approx(2 * 256 * 256 * 6, rel=0.01)
+    assert any(l["trip"] == 6 for l in mc.loops)
+
+
+def test_hlo_analyzer_nested_scans():
+    x = jnp.zeros((128,), jnp.float32)
+    Ws = jnp.zeros((3, 4, 128, 128))
+
+    def f(x, Ws):
+        def outer(c, Wrow):
+            def inner(ci, W):
+                return W @ ci, None
+            return jax.lax.scan(inner, c, Wrow)[0], None
+        return jax.lax.scan(outer, x, Ws)[0]
+
+    txt = jax.jit(f).lower(x, Ws).compile().as_text()
+    mc = analyze(txt)
+    assert mc.dot_flops == pytest.approx(2 * 128 * 128 * 12, rel=0.01)
+
+
+_FAKE_HLO = """
+HloModule test
+
+%cond (p: (s32[])) -> pred[] {
+  %c = s32[] constant(24)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+%body (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %ag = f32[64,128]{1,0} all-gather(%gte2), replica_groups=[2,8]<=[16], dimensions={0}
+  %ar = f32[64,128]{1,0} all-reduce(%ag), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+}
+
+ENTRY %main (a: f32[64,128]) -> f32[64,128] {
+  %w = (s32[], f32[64,128]) while(%t), condition=%cond, body=%body
+  %rs = f32[8,128]{1,0} reduce-scatter(%a2), replica_groups=[2,8]<=[16], dimensions={0}
+}
+"""
+
+
+def test_collective_parse_and_trip_multiplication():
+    mc = analyze(_FAKE_HLO, entry="main")
+    b = 64 * 128 * 4
+    # all-gather: G=8 (iota [2,8]) inside a 24-trip loop
+    assert mc.coll_counts["all-gather"] == 24
+    assert mc.coll_counts["all-reduce"] == 24
+    assert mc.coll_counts["reduce-scatter"] == 1
+    want_wire = (24 * (b * 7 / 8)            # AG
+                 + 24 * (2 * b * 3 / 4)      # AR, G=4 curly groups
+                 + (8 * 128 * 4) * 7)        # RS: out*(G-1)
+    assert mc.coll_wire == pytest.approx(want_wire)
+
+
+def test_sanitize_spec_drops_nondivisible():
+    import os
+    mesh = None
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    assert sanitize_spec(m, P("data", "model"), (32, 32)) == P("data",
+                                                               "model")
+    assert sanitize_spec(m, P("model"), (24,)) == P(None)
+    assert sanitize_spec(m, P(("data", "model")), (512,)) == \
+        P(("data", "model"))
+    assert sanitize_spec(m, P(("data", "model")), (128,)) == P(None)
+    # specs are padded to the full rank; non-divisible dims drop to None
+    assert sanitize_spec(m, P("data"), (8, 4)) == P(None, None)
+    assert sanitize_spec(m, P("data"), (32, 4)) == P("data", None)
+
+
+def test_roofline_terms_and_bottleneck():
+    t = rl.roofline_terms(197e12, 819e9 * 2, 50e9 * 3, chips=256)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["collective_s"] == pytest.approx(3.0)
+    assert t["bottleneck"] == "collective"
+
+
+def test_model_flops_formulas():
+    from repro.configs.base import get_arch
+    cfg = get_arch("qwen2-7b")
+    f_train = rl.model_flops(cfg, int(7.6e9), int(7.6e9), 4096, 256, "train")
+    assert f_train == pytest.approx(6 * 7.6e9 * 4096 * 256)
+    f_dec = rl.model_flops(cfg, int(7.6e9), int(7.6e9), 32768, 128, "decode")
+    assert f_dec == pytest.approx(2 * 7.6e9 * 128)
+
+
+def test_active_params_moe():
+    from repro.configs.base import get_arch
+    from repro.models.transformer import LMModel
+    cfg = get_arch("olmoe-1b-7b")
+    shapes = jax.eval_shape(
+        lambda: LMModel(cfg).init_params(jax.random.PRNGKey(0)))
+    total = rl.count_params(shapes)
+    active = rl.active_params(cfg, total)
+    # OLMoE: ~6.9B total / ~1.3B active
+    assert active < 0.35 * total
+    assert active > 0.1 * total

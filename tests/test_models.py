@@ -1,0 +1,171 @@
+"""Per-arch smoke tests + decode/prefill consistency + layer unit tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_arch, list_archs, smoke_variant
+from repro.models import mamba2 as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models.common import cross_entropy_chunked
+from repro.models.transformer import LMModel
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_grad(arch):
+    """Assignment requirement: reduced same-family config, one train step
+    on CPU, output shapes + no NaNs."""
+    cfg = smoke_variant(get_arch(arch))
+    model = LMModel(cfg)
+    p = model.init_params(jax.random.PRNGKey(1))
+    B, S = 2, 64
+    rx, ry = jax.random.split(jax.random.PRNGKey(7))
+    if cfg.input_mode == "tokens":
+        x = jax.random.randint(rx, (B, S), 0, cfg.vocab_size)
+    else:
+        x = jax.random.normal(rx, (B, S, cfg.d_model))
+    y = jax.random.randint(ry, (B, S), 0, cfg.vocab_size)
+    (loss, metrics), grads = jax.value_and_grad(
+        model.loss_and_aux, has_aux=True)(p, x, y)
+    assert bool(jnp.isfinite(loss)), arch
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+    h = model.hidden_states(p, x)
+    assert h.shape == (B, S, cfg.d_model)
+    logits, _ = model.serve_step(p, model.init_cache(B, 8),
+                                 x[:, :1] if cfg.input_mode == "tokens"
+                                 else x[:, :1, :], jnp.int32(1))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "gemma2-2b", "mamba2-130m",
+                                  "zamba2-2.7b", "olmoe-1b-7b",
+                                  "deepseek-v2-236b", "musicgen-large"])
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode must reproduce the training forward logits
+    (validates KV caches, RoPE offsets, masks, SSM states)."""
+    cfg = smoke_variant(get_arch(arch))
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)   # no MoE drops
+    model = LMModel(cfg)
+    p = model.init_params(jax.random.PRNGKey(1))
+    B, S = 2, 24
+    if cfg.input_mode == "tokens":
+        x = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                               cfg.vocab_size)
+        step_in = lambda t: x[:, t:t + 1]
+    else:
+        x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model))
+        step_in = lambda t: x[:, t:t + 1, :]
+    h = model.hidden_states(p, x)
+    full = model._logits_fn(p)(h).astype(jnp.float32)
+    if cfg.final_softcap:
+        full = cfg.final_softcap * jnp.tanh(full / cfg.final_softcap)
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.serve_step(p, cache, step_in(t), jnp.int32(t + 1))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1).astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-9
+    assert float(jnp.max(jnp.abs(dec - full))) / scale < 2e-2, arch
+
+
+def test_ssd_chunked_equals_reference():
+    rng = jax.random.PRNGKey(0)
+    Bb, S, H, P, N = 2, 96, 4, 8, 16
+    ks = jax.random.split(rng, 5)
+    xh = jax.random.normal(ks[0], (Bb, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bb, S, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (Bb, S, N)) * 0.5
+    for chunk in (16, 32, 96):
+        y1 = mamba_lib._ssd_chunk_scan(xh, dt, A, Bm, Cm, jnp.ones((H,)),
+                                       chunk=chunk)
+        y2 = mamba_lib.ssd_reference(xh, dt, A, Bm, Cm, jnp.ones((H,)))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_moe_routes_all_tokens_with_ample_capacity():
+    cfg = dataclasses.replace(smoke_variant(get_arch("olmoe-1b-7b")),
+                              capacity_factor=8.0)
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    out, aux = moe_lib.moe_apply(p, x, cfg, LMModel(cfg).ctx)
+    assert float(aux["dropped_frac"]) == 0.0
+    assert out.shape == x.shape
+    # load-balance loss is ~1 for a (near) uniform random router
+    assert 0.8 < float(aux["load_balance"]) < 1.6
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = dataclasses.replace(smoke_variant(get_arch("olmoe-1b-7b")),
+                              capacity_factor=0.05)
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    # enough tokens that per-expert load exceeds the 128-rounded capacity
+    x = jax.random.normal(jax.random.PRNGKey(1), (8192, cfg.d_model))
+    _, aux = moe_lib.moe_apply(p, x, cfg, LMModel(cfg).ctx)
+    assert float(aux["dropped_frac"]) > 0.1
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = smoke_variant(get_arch("gemma2-2b"))
+    model = LMModel(cfg)
+    p = model.init_params(jax.random.PRNGKey(0))
+    x = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab_size)
+    logits, _ = model.serve_step(p, model.init_cache(1, 16), x[:, :1],
+                                 jnp.int32(1))
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_cross_entropy_chunked_matches_unchunked():
+    rng = jax.random.PRNGKey(0)
+    B, S, D, V = 2, 32, 16, 64
+    h = jax.random.normal(rng, (B, S, D))
+    W = jax.random.normal(jax.random.fold_in(rng, 1), (D, V)) * 0.2
+    y = jax.random.randint(jax.random.fold_in(rng, 2), (B, S), 0, V)
+    fn = lambda hh: hh @ W
+    l1, n1 = cross_entropy_chunked(fn, h, y, n_chunks=1)
+    l4, n4 = cross_entropy_chunked(fn, h, y, n_chunks=4, final_softcap=0.0)
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-6)
+    assert float(n1) == float(n4) == B * S
+
+
+def test_sliding_window_restricts_context():
+    """A local layer must not see past the window."""
+    from repro.models.attention import flash_chunked
+    rng = np.random.default_rng(0)
+    S, D = 64, 16
+    q = jnp.asarray(rng.normal(size=(1, S, 2, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, S, 2, D)).astype(np.float32))
+    v0 = jnp.asarray(rng.normal(size=(1, S, 2, D)).astype(np.float32))
+    out0 = flash_chunked(q, k, v0, chunk_k=16, scale=0.25, window=8)
+    # perturb v at position 0: outputs at positions >= 8 must not change
+    v1 = v0.at[:, 0].add(100.0)
+    out1 = flash_chunked(q, k, v1, chunk_k=16, scale=0.25, window=8)
+    diff = np.abs(np.asarray(out1 - out0)).max(axis=(0, 2, 3))
+    assert diff[:8].max() > 0
+    np.testing.assert_allclose(diff[8:], 0.0, atol=1e-5)
+
+
+def test_param_counts_close_to_nominal():
+    """Full configs instantiate (eval_shape only) near their nameplate
+    parameter counts."""
+    import re
+    from repro.launch.roofline import count_params
+    expected = {"yi-34b": 34e9, "qwen2.5-14b": 14e9, "qwen2-7b": 7.6e9,
+                "gemma2-2b": 2.6e9, "mamba2-130m": 0.13e9,
+                "deepseek-v2-236b": 236e9, "chameleon-34b": 34e9,
+                "zamba2-2.7b": 2.7e9, "olmoe-1b-7b": 6.9e9}
+    for arch, want in expected.items():
+        cfg = get_arch(arch)
+        model = LMModel(cfg)
+        shapes = jax.eval_shape(
+            lambda m=model: m.init_params(jax.random.PRNGKey(0)))
+        got = count_params(shapes)
+        assert 0.7 * want < got < 1.45 * want, (arch, got, want)

@@ -1,0 +1,156 @@
+"""Optimiser, quantised state, compression, and checkpointing tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.optim import adamw, clip_by_global_norm, sgdm, warmup_cosine
+from repro.optim.compression import (EFState, compress_with_error_feedback,
+                                     init_ef)
+from repro.optim.quantized import BLOCK, dequantize, quantize
+
+
+def _quadratic_params():
+    return {"w": jnp.asarray([3.0, -2.0, 5.0]),
+            "b": {"x": jnp.asarray([[1.0, -1.0], [0.5, 0.25]])}}
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "int8"])
+def test_adamw_decreases_quadratic(moment_dtype):
+    opt = adamw(0.1, weight_decay=0.0, moment_dtype=moment_dtype)
+    params = _quadratic_params()
+    state = opt.init(params)
+    loss = lambda p: (jnp.sum(p["w"] ** 2)
+                      + jnp.sum(p["b"]["x"] ** 2))
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_int8_and_fp32_adam_agree_early():
+    params = _quadratic_params()
+    o1, o2 = adamw(0.05), adamw(0.05, moment_dtype="int8")
+    s1, s2 = o1.init(params), o2.init(params)
+    p1 = p2 = params
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"]["x"] ** 2)
+    for _ in range(10):
+        p1, s1 = o1.update(jax.grad(loss)(p1), s1, p1)
+        p2, s2 = o2.update(jax.grad(loss)(p2), s2, p2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0.08, atol=0.02)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000), scale=st.floats(1e-6, 1e4), seed=st.integers(0, 99))
+def test_quantize_roundtrip_error_bound(n, scale, seed):
+    x = np.random.default_rng(seed).normal(size=n).astype(np.float32) * scale
+    q = quantize(jnp.asarray(x))
+    back = np.asarray(dequantize(q))
+    assert q.q.shape == x.shape            # shape-preserving layout (H3)
+    # blockwise absmax int8: error <= absmax_block / 127 per element
+    b = q.block
+    blocks = x.reshape(-1, b)
+    bound = np.repeat(np.abs(blocks).max(1) / 127.0, b)[:n] + 1e-12
+    assert (np.abs(back - x) <= bound * 1.01).all()
+    assert q.q.dtype == np.int8
+
+
+def test_quantize_2d_shape_and_block():
+    x = np.random.default_rng(0).normal(size=(8, 192)).astype(np.float32)
+    q = quantize(jnp.asarray(x))
+    assert q.q.shape == (8, 192) and q.block == 192
+    assert q.scale.shape == (8, 1)
+    np.testing.assert_allclose(np.asarray(dequantize(q)), x, atol=np.abs(
+        x).max() / 100)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-6)
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_error_feedback_compression_is_lossless_over_time():
+    """Top-k with error feedback transmits everything eventually: the sum
+    of sparsified tensors + final residual equals the sum of inputs."""
+    rng = np.random.default_rng(0)
+    shape = (64,)
+    ef = init_ef({"g": jnp.zeros(shape)})
+    total_in = np.zeros(shape, np.float32)
+    total_sent = np.zeros(shape, np.float32)
+    for step in range(20):
+        g = {"g": jnp.asarray(rng.normal(size=shape).astype(np.float32))}
+        total_in += np.asarray(g["g"])
+        sparse, ef, dens = compress_with_error_feedback(g, ef, k_frac=0.1)
+        total_sent += np.asarray(sparse["g"])
+        assert float(dens) <= 0.15
+    np.testing.assert_allclose(total_sent + np.asarray(ef.residual["g"]),
+                               total_in, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.normal(size=(8, 4))
+                                        .astype(np.float32)),
+                       "b": jnp.asarray(rng.normal(size=(4,))
+                                        .astype(np.float32))},
+            "opt": {"count": jnp.asarray(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, keep_last=2)
+    t = _tree()
+    ck.save(10, t, metadata={"cursor": 1234}, blocking=True)
+    got, meta = ck.restore(jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert meta["step"] == 10 and meta["cursor"] == 1234
+
+
+def test_checkpoint_async_and_prune(tmp_path):
+    ck = Checkpointer(tmp_path, keep_last=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+    got, meta = ck.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert meta["step"] == 4
+
+
+def test_checkpoint_restore_with_quantized_state(tmp_path):
+    from repro.optim import adamw
+    params = {"w": jnp.ones((300,))}
+    opt = adamw(0.1, moment_dtype="int8")
+    state = opt.init(params)
+    _, state = opt.update({"w": jnp.ones((300,)) * 0.3}, state, params)
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"opt": state}, blocking=True)
+    like = {"opt": opt.init(params)}
+    got, _ = ck.restore(like)
+    np.testing.assert_array_equal(np.asarray(got["opt"].m["w"].q),
+                                  np.asarray(state.m["w"].q))
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(5, _tree(), blocking=True)
+    assert not list(tmp_path.glob(".tmp-*"))
+    assert ck.latest_step() == 5

@@ -1,0 +1,101 @@
+"""Quality criteria (R_NX), synthetic data, token stream."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knn import exact_knn
+from repro.core.quality import (embedding_quality, one_nn_accuracy,
+                                qnx_curve, rnx_auc, rnx_curve)
+from repro.data import synthetic
+from repro.data.tokens import TokenStream, TokenStreamConfig
+
+
+def test_rnx_identity_is_one():
+    X, _ = synthetic.blobs(n=300, dim=8, seed=0)
+    assert float(embedding_quality(jnp.asarray(X), jnp.asarray(X))) \
+        > 0.999
+
+
+def test_rnx_random_is_zero():
+    X, _ = synthetic.blobs(n=300, dim=8, seed=0)
+    Y = np.random.default_rng(1).normal(size=(300, 2)).astype(np.float32)
+    assert abs(float(embedding_quality(jnp.asarray(X), jnp.asarray(Y)))) \
+        < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(20, 120), k=st.integers(2, 10), seed=st.integers(0, 99))
+def test_qnx_bounds_and_monotone_overlap(n, k, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 5)).astype(np.float32)
+    t, _ = exact_knn(jnp.asarray(X), k)
+    e, _ = exact_knn(jnp.asarray(X + 0.01 * rng.normal(size=X.shape)
+                                 .astype(np.float32)), k)
+    q = np.asarray(qnx_curve(e, t))
+    assert (q >= 0).all() and (q <= 1 + 1e-6).all()
+    r = np.asarray(rnx_curve(e, t, n))
+    assert (r <= 1 + 1e-6).all()
+
+
+def test_rnx_auc_weighting_prefers_local():
+    # a curve good at small K must beat one good at large K under 1/K
+    k = 50
+    good_local = jnp.asarray([1.0] * 10 + [0.0] * (k - 10))
+    good_global = jnp.asarray([0.0] * (k - 10) + [1.0] * 10)
+    assert float(rnx_auc(good_local)) > float(rnx_auc(good_global))
+
+
+def test_one_nn_leave_one_out():
+    X, labels = synthetic.blobs(n=300, dim=8, n_centers=3, center_std=10.0,
+                                blob_std=0.5, seed=2)
+    acc = one_nn_accuracy(jnp.asarray(X), jnp.asarray(labels),
+                          jax.random.PRNGKey(0))
+    assert float(acc) > 0.95
+
+
+def test_one_nn_one_shot():
+    X, labels = synthetic.blobs(n=200, dim=8, n_centers=4, center_std=12.0,
+                                blob_std=0.5, seed=3)
+    acc = one_nn_accuracy(jnp.asarray(X), jnp.asarray(labels),
+                          jax.random.PRNGKey(0), n_trials=3, one_shot=True)
+    assert float(acc) > 0.8
+
+
+def test_synthetic_shapes_and_labels():
+    X, l = synthetic.blobs(n=100, dim=7)
+    assert X.shape == (100, 7) and l.shape == (100,)
+    X, l = synthetic.s_curve(n=50, unbalanced=True)
+    assert X.shape == (50, 3) and set(np.unique(l)) <= {0, 1}
+    X, l = synthetic.coil_rings(n_objects=3, n_per_object=10, dim=12)
+    assert X.shape == (30, 12) and len(np.unique(l)) == 3
+    X, major, minor = synthetic.hierarchical_cells(n=160, dim=10)
+    assert X.shape[0] == len(major) == len(minor)
+    X, l = synthetic.mnist_like(n=100, dim=16)
+    assert X.shape == (100, 16)
+
+
+def test_token_stream_deterministic_and_host_sharded():
+    cfg = TokenStreamConfig(vocab_size=128, seq_len=16, global_batch=8)
+    a = TokenStream(cfg).batch(3)
+    b = TokenStream(cfg).batch(3)
+    np.testing.assert_array_equal(a, b)
+    c = TokenStream(cfg).batch(4)
+    assert not np.array_equal(a, c)
+    h0 = TokenStream(cfg, host_id=0, n_hosts=2).batch(3)
+    h1 = TokenStream(cfg, host_id=1, n_hosts=2).batch(3)
+    assert h0.shape == (4, 17)
+    assert not np.array_equal(h0, h1)
+    assert a.max() < 128 and a.min() >= 0
+
+
+def test_dbscan_two_blobs():
+    from repro.core.dbscan import dbscan, relabel_compact
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(60, 2)) * 0.2
+    b = rng.normal(size=(60, 2)) * 0.2 + 10.0
+    Y = np.concatenate([a, b]).astype(np.float32)
+    labels, k = relabel_compact(dbscan(jnp.asarray(Y), eps=1.0, min_pts=4))
+    assert k == 2
+    assert len(set(labels[:60]) - {-1}) == 1
+    assert set(labels[:60]) - {-1} != set(labels[60:]) - {-1}

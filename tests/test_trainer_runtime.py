@@ -1,0 +1,89 @@
+"""Fault tolerance: checkpoint/restart determinism, failure injection,
+straggler detection."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.data.tokens import TokenStream, TokenStreamConfig
+from repro.launch.steps import make_model, make_optimizer, make_train_step
+from repro.launch.train import reduced_variant
+from repro.runtime.straggler import StepTimeMonitor
+from repro.runtime.trainer import (SimulatedFailure, Trainer, TrainerConfig)
+
+
+def _setup(tmp_path, total=24, fail_at=None, ckpt_every=8):
+    cfg = dataclasses.replace(reduced_variant(get_arch("qwen2-7b"),
+                                              d_model=64, n_layers=2),
+                              vocab_size=256)
+    model = make_model(cfg)
+    opt = make_optimizer(cfg, peak_lr=1e-3, warmup=5, total=total)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    stream = TokenStream(TokenStreamConfig(vocab_size=cfg.vocab_size,
+                                           seq_len=32, global_batch=4))
+
+    def data_fn(step):
+        x, y = stream.train_pair(step)
+        return {"inputs": jnp.asarray(x), "labels": jnp.asarray(y)}
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    trainer = Trainer(TrainerConfig(
+        total_steps=total, checkpoint_every=ckpt_every,
+        checkpoint_dir=str(tmp_path), log_every=1000,
+        fail_at_step=fail_at), step_fn, data_fn, params, opt_state,
+        logger=lambda s: None)
+    return trainer
+
+
+def test_loss_decreases(tmp_path):
+    trainer = _setup(tmp_path / "a", total=30)
+    hist = trainer.run()
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first, (first, last)
+
+
+def test_failure_injection_and_exact_restart(tmp_path):
+    # uninterrupted run
+    ref = _setup(tmp_path / "ref", total=20, ckpt_every=8)
+    ref_hist = ref.run()
+
+    # crashed run: dies at step 13 (after the step-8 checkpoint)
+    crash = _setup(tmp_path / "crash", total=20, fail_at=13, ckpt_every=8)
+    with pytest.raises(SimulatedFailure):
+        crash.run()
+
+    # relaunch: restores step-8 checkpoint, resumes the same data order
+    resume = _setup(tmp_path / "crash", total=20, ckpt_every=8)
+    assert resume.maybe_restore()
+    assert resume.start_step == 8
+    resume_hist = resume.run()
+    ref_by_step = {h["step"]: h["loss"] for h in ref_hist}
+    for h in resume_hist:
+        np.testing.assert_allclose(h["loss"], ref_by_step[h["step"]],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_straggler_monitor_flags_spike():
+    mon = StepTimeMonitor(warmup_steps=3, z_thresh=3.0)
+    alarms = [mon.observe(0.10 + 0.001 * i) for i in range(20)]
+    assert not any(alarms)
+    assert mon.observe(1.5) is not None
+
+
+def test_straggler_monitor_hang():
+    mon = StepTimeMonitor(warmup_steps=1, hang_timeout=2.0)
+    mon.observe(0.1)
+    assert "hang" in mon.observe(3.0)
+
+
+def test_elastic_remesh_shapes():
+    from repro.runtime.elastic import remesh, surviving_pods
+    mesh = remesh(1, model=16)
+    assert mesh.devices.size == 1
+    assert surviving_pods({0: 100.0, 1: 50.0}, timeout_s=30.0,
+                          now=110.0) == [0]
