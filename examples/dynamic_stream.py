@@ -14,7 +14,8 @@ import jax.numpy as jnp          # noqa: E402
 import numpy as np               # noqa: E402
 
 from repro.core import funcsne                       # noqa: E402
-from repro.core.quality import knn_set_quality       # noqa: E402
+from repro.core.knn import exact_knn                 # noqa: E402
+from repro.core.quality import rnx_auc, rnx_curve    # noqa: E402
 from repro.data.synthetic import blobs               # noqa: E402
 
 
@@ -25,7 +26,8 @@ def main():
     cfg = funcsne.FuncSNEConfig(n_points=n_total, dim_hd=24)
     hp = funcsne.default_hparams(n_total, perplexity=12.0)
     active = jnp.arange(n_total) < wave
-    st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg, active=active)
+    st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg, active=active,
+                            perplexity=hp.perplexity)
     step = funcsne.make_step(cfg)
 
     for wave_i in range(3):
@@ -34,8 +36,13 @@ def main():
             st = step(st, Xj, hp)
         jax.block_until_ready(st.Y)
         act = int(st.active.sum())
-        ids = np.nonzero(np.asarray(st.active))[0]
-        q = float(knn_set_quality(st.hd_idx[ids][:512], Xj))
+        # sample the first 512 rows (active in every wave); the exact KNN
+        # reference must exclude not-yet-arrived points, and the R_NX
+        # chance correction must use the active count, not capacity
+        k = cfg.k_hd
+        true_idx, _ = exact_knn(Xj, k, active=st.active)
+        q = float(rnx_auc(rnx_curve(st.hd_idx[:512, :k], true_idx[:512],
+                                    act)))
         print(f"wave {wave_i}: {act} active points, 300 iters in "
               f"{time.time() - t0:.1f}s, knn AUC(sample)={q:.3f}")
         if wave_i < 2:

@@ -1,0 +1,48 @@
+"""Compatibility shims over moving JAX APIs (supports jax >= 0.4.37).
+
+The distribution layer targets the modern surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``, ``AxisType``); on
+older installs we fall back to ``jax.experimental.shard_map`` /
+``check_rep`` and positional ``make_mesh``.  Import from here, never from
+``jax.sharding`` directly, for any of these three names.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5-era explicit-sharding API
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _HAVE_AXIS_TYPE = True
+except ImportError:  # pragma: no cover - depends on installed jax
+    _HAVE_AXIS_TYPE = False
+
+    class AxisType:  # minimal stand-in: old meshes behave as Auto
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates the absence of ``axis_types``."""
+    kwargs = {"devices": devices} if devices is not None else {}
+    if _HAVE_AXIS_TYPE:
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(tuple(axis_names))
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kwargs)
+        except TypeError:  # pragma: no cover - transitional versions
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

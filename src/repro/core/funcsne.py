@@ -24,6 +24,28 @@ slices are reassembled with tiled all-gathers / a single force psum.  The HD
 feature dimension is sharded over the ``feat`` axis and squared distances
 are psum'd -- tensor parallelism for the NE.  Passing ``ctx=AxisCtx()``
 (no axes) yields the single-device program, so both paths share this code.
+
+§Perf notes (H-series; inline comments reference these ids):
+  H10a  force psum crosses the wire in bf16 (f32 local accumulation);
+        negative-sampling noise dominates the bf16 rounding error.
+  H10b  ld_d is never all-gathered: it is re-derived from Y at the next
+        refinement, so cross-chip transport is pure waste.
+  H11   squared HD distances cross the wire in bf16 (merge thresholds and
+        the sigma solve tolerate ~0.4% relative error).
+  H12   gather-fused kernels: ``pairwise_sqdist_gather`` /
+        ``ne_forces_gather`` take *indices* and DMA only the needed rows
+        inside the kernel (X/Y stay in HBM), instead of XLA materialising
+        (n, C, M) / (n, K, d) gathered operands in HBM per launch and the
+        kernel streaming them back a second time.  Applies to HD candidate
+        scoring, the LD current-distance refresh (one fused launch scores
+        current + candidate LD neighbours), and the force phase.
+        ``cfg.gather_fused=False`` restores the legacy pre-gather wiring
+        (kept for bit-equivalence tests and A/B benches).
+  H13   single force launch: HD attraction + LD repulsion + negatives run
+        as static segments of ONE ``ne_forces_gather`` call over the
+        concatenated neighbour axis -- one read of Y and one launch where
+        there were three of each; per-segment outputs avoid any
+        concat/re-slice round-trip at the call site.
 """
 from __future__ import annotations
 
@@ -35,11 +57,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import affinities
 from repro.core import knn as knn_lib
 from repro.core.knn import SENTINEL
-from repro.kernels.ne_forces.ops import ne_forces
-from repro.kernels.pairwise_sqdist.ops import pairwise_sqdist
+from repro.kernels.ne_forces.ops import ne_forces, ne_forces_gather
+from repro.kernels.pairwise_sqdist.ops import (pairwise_sqdist,
+                                               pairwise_sqdist_gather)
 
 
 # --------------------------------------------------------------------------
@@ -70,6 +94,10 @@ class FuncSNEConfig:
     ema_decay: float = 0.9        # for E[N_new / N]
     z_ema_decay: float = 0.9
     backend: str = "auto"         # kernels backend
+    # gather-fused hot path (§Perf H12/H13): kernels take indices and DMA
+    # rows in-kernel; False re-materialises X[cand]/Y[idx] per launch
+    # (legacy pre-gather wiring, kept for equivalence tests and A/B benches)
+    gather_fused: bool = True
 
     @property
     def c_hd(self) -> int:
@@ -157,11 +185,18 @@ def _take(arr, idx):
     return arr[jnp.clip(idx, 0, arr.shape[0] - 1)]
 
 
-def _row_sqdist(X, ids, cand, ctx: AxisCtx, backend: str):
-    """Squared HD distances rows->candidates, psum over the feature axis."""
-    q = X[ids]
-    c = _take(X, cand)
-    d = pairwise_sqdist(q, c, backend=backend)
+def _row_sqdist(X, ids, cand, ctx: AxisCtx, cfg: "FuncSNEConfig"):
+    """Squared HD distances rows->candidates, psum over the feature axis.
+
+    Gather-fused (default): the kernel receives indices and DMAs rows of X
+    in-kernel, so the (n_loc, C, M) gathered operand never hits HBM.  The
+    feature-axis psum semantics are unchanged -- each shard computes partial
+    squared distances over its local M slice.
+    """
+    if cfg.gather_fused:
+        d = pairwise_sqdist_gather(X, ids, cand, backend=cfg.backend)
+    else:
+        d = pairwise_sqdist(X[ids], _take(X, cand), backend=cfg.backend)
     if ctx.feat is not None:
         d = jax.lax.psum(d, ctx.feat)
     return d
@@ -200,7 +235,7 @@ def _hd_refine(cfg: FuncSNEConfig, st: FuncSNEState, X, rng, ctx: AxisCtx):
 
     valid = knn_lib.dedup_candidates(ids, hd_l, cand)
     valid &= _take(st.active, cand)
-    cand_d = _row_sqdist(X, ids, cand, ctx, cfg.backend)
+    cand_d = _row_sqdist(X, ids, cand, ctx, cfg)
     new_idx, new_d, improved = knn_lib.merge_knn(hd_l, hd_d_l, cand, cand_d,
                                                  valid)
 
@@ -271,14 +306,22 @@ def _ld_refine(cfg: FuncSNEConfig, st: FuncSNEState, rng, ctx: AxisCtx):
     valid = knn_lib.dedup_candidates(ids, ld_l, cand)
     valid &= _take(st.active, cand)
 
-    y_l = st.Y[ids]
     # refresh stored distances (embedding moved since the last merge)
-    cur_nbr = _take(st.Y, ld_l)
     cur_valid = (ld_l != SENTINEL) & _take(st.active, ld_l)
-    cur_d = jnp.sum((cur_nbr - y_l[:, None, :]) ** 2, axis=-1)
+    if cfg.gather_fused:
+        # §Perf H12: index-taking kernel -- no (n_loc, K+C, d) Y-gather
+        # buffers; one fused launch scores current + candidate neighbours
+        both = jnp.concatenate([ld_l, cand], axis=1)
+        both_d = pairwise_sqdist_gather(st.Y, ids, both,
+                                        backend=cfg.backend)
+        cur_d, cand_d = jnp.split(both_d, [ld_l.shape[1]], axis=1)
+    else:
+        y_l = st.Y[ids]
+        cur_nbr = _take(st.Y, ld_l)
+        cur_d = jnp.sum((cur_nbr - y_l[:, None, :]) ** 2, axis=-1)
+        cand_nbr = _take(st.Y, cand)
+        cand_d = jnp.sum((cand_nbr - y_l[:, None, :]) ** 2, axis=-1)
     cur_d = jnp.where(cur_valid, cur_d, jnp.inf)
-    cand_nbr = _take(st.Y, cand)
-    cand_d = jnp.sum((cand_nbr - y_l[:, None, :]) ** 2, axis=-1)
 
     new_idx, new_d, _ = knn_lib.merge_knn(ld_l, cur_d, cand, cand_d, valid)
     ld_idx = _gather_rows(new_idx, ctx.all_rows)
@@ -309,7 +352,6 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
     ld_i = jax.lax.dynamic_slice_in_dim(st.ld_idx, start, n_loc)
     beta_l = jax.lax.dynamic_slice_in_dim(st.beta, start, n_loc)
     act_l = jax.lax.dynamic_slice_in_dim(st.active, start, n_loc)
-    y_l = st.Y[ids]
     n_act = jnp.maximum(jnp.sum(st.active.astype(jnp.float32)), 2.0)
 
     # ---- attraction over the HD set:  coef = p_{j|i} / (2N)  (Eq. 1)
@@ -317,26 +359,47 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
     hd_valid &= _take(st.active, hd_i)
     p = affinities.p_rows(hd_d, beta_l, valid=hd_valid)
     coef_a = jnp.where(hd_valid & act_l[:, None], p, 0.0) / (2.0 * n_act)
-    nbr_a = _take(st.Y, hd_i)
-    agg_a, edge_a, _ = ne_forces(y_l, nbr_a, coef_a, hp.alpha,
-                                 mode="attraction", backend=cfg.backend)
 
     # ---- repulsion over the LD set (paper's novel middle term of Eq. 6)
     # coef 0.5: each directed edge acts on both endpoints below, so mutual
     # LD pairs would otherwise be double-counted.
     ld_valid = (ld_i != SENTINEL) & _take(st.active, ld_i)
     coef_r = 0.5 * (ld_valid & act_l[:, None]).astype(jnp.float32)
-    nbr_r = _take(st.Y, ld_i)
-    agg_r, edge_r, wsum_r = ne_forces(y_l, nbr_r, coef_r, hp.alpha,
-                                      mode="repulsion", backend=cfg.backend)
 
     # ---- far-field via negative sampling (third term of Eq. 6)
     neg = knn_lib.sample_uniform(rng, n_loc, n, cfg.n_negatives)
     neg = jnp.where(neg == ids[:, None], (neg + 1) % n, neg)
     coef_n = (_take(st.active, neg) & act_l[:, None]).astype(jnp.float32)
-    agg_n, _, wsum_n = ne_forces(y_l, _take(st.Y, neg), coef_n, hp.alpha,
-                                 mode="repulsion", backend=cfg.backend)
     scale_neg = jnp.maximum(n_act - 1.0 - cfg.k_ld, 1.0) / cfg.n_negatives
+
+    if cfg.gather_fused:
+        # §Perf H13: ONE batched launch over the concatenated neighbour
+        # axis replaces the three per-step force launches; y_l is read
+        # once (DMA'd in-kernel) instead of three gathered (n, K, d)
+        # buffers round-tripping through HBM.
+        nbr_idx = jnp.concatenate([hd_i, ld_i, neg], axis=1)
+        coef = jnp.concatenate([coef_a, coef_r, coef_n], axis=1)
+        segments = (("attraction", cfg.k_hd), ("repulsion", cfg.k_ld),
+                    ("repulsion", cfg.n_negatives))
+        # negatives' edges are never scattered back -> skip their HBM write
+        aggs, edges, wsums = ne_forces_gather(st.Y, ids, nbr_idx, coef,
+                                              hp.alpha, segments=segments,
+                                              emit_edges=(True, True, False),
+                                              backend=cfg.backend)
+        agg_a, agg_r, agg_n = aggs
+        edge_a, edge_r, _ = edges
+        _, wsum_r, wsum_n = wsums
+    else:
+        y_l = st.Y[ids]
+        agg_a, edge_a, _ = ne_forces(y_l, _take(st.Y, hd_i), coef_a,
+                                     hp.alpha, mode="attraction",
+                                     backend=cfg.backend)
+        agg_r, edge_r, wsum_r = ne_forces(y_l, _take(st.Y, ld_i), coef_r,
+                                          hp.alpha, mode="repulsion",
+                                          backend=cfg.backend)
+        agg_n, _, wsum_n = ne_forces(y_l, _take(st.Y, neg), coef_n,
+                                     hp.alpha, mode="repulsion",
+                                     backend=cfg.backend)
 
     # ---- Z estimator:  Z ~= sum_i [ sum_{j in LD_i} w_ij + scale * mean_neg ]
     # (x2 undoes the 0.5 symmetrisation coefficient baked into coef_r)
@@ -428,7 +491,7 @@ def pca_directions(X, d: int, n_iter: int = 24, rng=None):
 
 
 def init_state(rng, X, cfg: FuncSNEConfig, *, init: str = "pca",
-               active=None, Y0=None) -> FuncSNEState:
+               active=None, Y0=None, perplexity=30.0) -> FuncSNEState:
     n, d = cfg.n_points, cfg.dim_ld
     assert X.shape == (n, cfg.dim_hd), (X.shape, cfg)
     r_y, r_hd, r_ld, r_state = jax.random.split(rng, 4)
@@ -440,25 +503,31 @@ def init_state(rng, X, cfg: FuncSNEConfig, *, init: str = "pca",
         Y = Y / jnp.maximum(jnp.std(Y), 1e-8) * 1e-2
     else:
         Y = jax.random.normal(r_y, (n, d)) * 1e-2
+    Y = Y.astype(jnp.float32)
     if active is None:
         active = jnp.ones((n,), bool)
 
-    hd_idx = knn_lib.init_knn_idx(r_hd, n, n, cfg.k_hd)
     ids = jnp.arange(n, dtype=jnp.int32)
-    hd_d = pairwise_sqdist(X, X[hd_idx], backend=cfg.backend)
+    hd_idx = knn_lib.init_knn_idx(r_hd, n, n, cfg.k_hd)
+    if cfg.gather_fused:
+        hd_d = pairwise_sqdist_gather(X, ids, hd_idx, backend=cfg.backend)
+    else:
+        hd_d = pairwise_sqdist(X, X[hd_idx], backend=cfg.backend)
     hd_d = jnp.where(active[hd_idx] & active[:, None], hd_d, jnp.inf)
     order = jnp.argsort(hd_d, axis=1)
     hd_idx = jnp.take_along_axis(hd_idx, order, axis=1)
     hd_d = jnp.take_along_axis(hd_d, order, axis=1)
 
     ld_idx = knn_lib.init_knn_idx(r_ld, n, n, cfg.k_ld)
-    ld_d = jnp.sum((Y[:, None, :] - Y[ld_idx]) ** 2, axis=-1)
+    if cfg.gather_fused:
+        ld_d = pairwise_sqdist_gather(Y, ids, ld_idx, backend=cfg.backend)
+    else:
+        ld_d = jnp.sum((Y[:, None, :] - Y[ld_idx]) ** 2, axis=-1)
     ld_d = jnp.where(active[ld_idx] & active[:, None], ld_d, jnp.inf)
 
-    beta = affinities.solve_beta(hd_d, 30.0, n_iter=24)
-    del ids
+    beta = affinities.solve_beta(hd_d, perplexity, n_iter=24)
     return FuncSNEState(
-        Y=Y.astype(jnp.float32), vel=jnp.zeros((n, d), jnp.float32),
+        Y=Y, vel=jnp.zeros((n, d), jnp.float32),
         gains=jnp.ones((n, d), jnp.float32),
         hd_idx=hd_idx.astype(jnp.int32), hd_d=hd_d,
         ld_idx=ld_idx.astype(jnp.int32), ld_d=ld_d,
@@ -481,10 +550,10 @@ def make_distributed_step(cfg: FuncSNEConfig, mesh, *,
         return funcsne_step(cfg, st, X, hp, ctx)
 
     state_specs = FuncSNEState(*([P()] * len(FuncSNEState._fields)))
-    fn = jax.shard_map(step, mesh=mesh,
-                       in_specs=(state_specs, P(None, feat_axis),
-                                 HParams(*([P()] * len(HParams._fields)))),
-                       out_specs=state_specs, check_vma=False)
+    fn = compat.shard_map(step, mesh=mesh,
+                          in_specs=(state_specs, P(None, feat_axis),
+                                    HParams(*([P()] * len(HParams._fields)))),
+                          out_specs=state_specs, check_vma=False)
     return jax.jit(fn, donate_argnums=(0,)), ctx
 
 
@@ -529,7 +598,7 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         hparams = default_hparams(cfg.n_points)
     if schedule is None:
         schedule = default_schedule
-    st = init_state(rng, X, cfg, init=init)
+    st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
     step = make_step(cfg)
     snapshots = []
     for it in range(n_iter):

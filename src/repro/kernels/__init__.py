@@ -10,4 +10,12 @@ Kernels (the compute hot-spots the paper optimises on GPU, re-tiled for TPU):
   pairwise_sqdist  -- blocked ||q - c||^2 for KNN candidate scoring (HD hot spot)
   ne_forces        -- fused variable-tail attraction/repulsion force evaluation
   flash_attention  -- causal GQA flash attention (LM prefill hot spot)
+
+The two NE kernels each come in two flavours: the pre-gather form takes
+already-gathered (B, C, M) / (B, K, d) operands, and the gather-fused form
+(``*_gather``) takes *indices* and DMAs only the needed rows in-kernel
+(source matrix stays in HBM/ANY; index slabs staged into SMEM by the
+pipeline).  The gather-fused forms are the per-iteration default
+(funcsne §Perf H12/H13); the pre-gather forms remain for A/B testing and
+as building blocks elsewhere.
 """

@@ -27,19 +27,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _ne_forces_kernel(alpha_ref, y_ref, nbr_ref, coef_ref, agg_ref, edge_ref,
-                      wsum_ref, *, mode: str):
-    alpha = alpha_ref[0, 0]
-    y = y_ref[...].astype(jnp.float32)              # (bb, d)
-    nbr = nbr_ref[...].astype(jnp.float32)          # (bb, K, d)
-    coef = coef_ref[...].astype(jnp.float32)        # (bb, K)
-
-    delta = nbr - y[:, None, :]
+def _edge_wsum(delta, coef, alpha, mode: str):
+    """Closed-form tail powers -> (edge, wsum); the single in-kernel copy
+    of the force math shared by the pre-gather and gather-fused kernels
+    (semantics in ref.py)."""
     d2 = jnp.sum(delta * delta, axis=-1)            # (bb, K)
     base = 1.0 + d2 / alpha
-
     if mode == "attraction":
         wexp = 1.0 / base
         edge = (coef * wexp)[..., None] * delta
@@ -50,7 +46,17 @@ def _ne_forces_kernel(alpha_ref, y_ref, nbr_ref, coef_ref, agg_ref, edge_ref,
         w = jnp.exp(-alpha * logb)
         edge = (coef * wexp)[..., None] * (-delta)
         wsum = jnp.sum(coef * w, axis=-1)
+    return edge, wsum
 
+
+def _ne_forces_kernel(alpha_ref, y_ref, nbr_ref, coef_ref, agg_ref, edge_ref,
+                      wsum_ref, *, mode: str):
+    alpha = alpha_ref[0, 0]
+    y = y_ref[...].astype(jnp.float32)              # (bb, d)
+    nbr = nbr_ref[...].astype(jnp.float32)          # (bb, K, d)
+    coef = coef_ref[...].astype(jnp.float32)        # (bb, K)
+
+    edge, wsum = _edge_wsum(nbr - y[:, None, :], coef, alpha, mode)
     agg_ref[...] = jnp.sum(edge, axis=1)
     edge_ref[...] = edge
     wsum_ref[...] = wsum[:, None]
@@ -98,3 +104,175 @@ def ne_forces_pallas(y, nbr, coef, alpha, *, mode: str, block_b: int = 128,
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+# --------------------------------------------------------------------------
+# Gather-fused, segmented variant.
+#
+# The pre-gather kernel above receives Y[idx] as a dense (B, K, d) operand,
+# which XLA materialises in HBM before the launch -- and FUnc-SNE launches
+# it three times per step (HD attraction, LD repulsion, negatives), reading
+# the embedding three times.  This variant
+#   * takes *indices* and DMAs only the needed embedding rows per block
+#     (Y stays in HBM/ANY memory; the (B, K, d) buffer never exists), and
+#   * evaluates several neighbour *segments* with independent modes in one
+#     launch over the concatenated neighbour axis, so one gather of y_l and
+#     one kernel launch replace all three per-step force launches.
+# Segment boundaries are static config, so each segment's closed-form tail
+# power is compiled straight-line -- no per-edge mode mask is evaluated.
+#
+# Index slabs are staged into SMEM by the pipeline (O(block_b * K), never
+# O(B)); row DMAs are issued back-to-back on one semaphore and drained in
+# issue order (distinct destination slots -> no WAR hazard).
+
+
+def _ne_forces_gather_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
+                             *refs, segments: tuple, emit_edges: tuple):
+    """qid (bb,) SMEM; nbr (bb, K) SMEM; alpha (1,1) SMEM; coef (bb, K) VMEM;
+    x (N, d) ANY -> per segment s: agg (bb, d), edge (bb, K_s, d) for
+    segments with emit_edges[s], wsum (bb, 1); then scratch
+    (q_scr, n_scr, sem)."""
+    S = len(segments)
+    E = sum(emit_edges)
+    agg_refs = refs[:S]
+    edge_refs = refs[S:S + E]
+    wsum_refs = refs[S + E:2 * S + E]
+    q_scr, n_scr, sem = refs[2 * S + E:]
+    block_b, K, _ = n_scr.shape
+
+    def q_dma(r):
+        return pltpu.make_async_copy(x_ref.at[qid_ref[r]], q_scr.at[r], sem)
+
+    def n_dma(r, k):
+        return pltpu.make_async_copy(x_ref.at[nbr_ref[r, k]], n_scr.at[r, k],
+                                     sem)
+
+    def issue(r, _):
+        q_dma(r).start()
+        jax.lax.fori_loop(0, K, lambda k, x: (n_dma(r, k).start(), x)[1],
+                          None)
+        return _
+
+    def drain(r, _):
+        q_dma(r).wait()
+        jax.lax.fori_loop(0, K, lambda k, x: (n_dma(r, k).wait(), x)[1],
+                          None)
+        return _
+
+    jax.lax.fori_loop(0, block_b, issue, None)
+    jax.lax.fori_loop(0, block_b, drain, None)
+
+    alpha = alpha_ref[0, 0]
+    y = q_scr[...].astype(jnp.float32)              # (bb, d)
+    nbr = n_scr[...].astype(jnp.float32)            # (bb, K, d)
+    coef = coef_ref[...].astype(jnp.float32)        # (bb, K)
+
+    k0, e_i = 0, 0
+    for s, (mode, size) in enumerate(segments):
+        sl = slice(k0, k0 + size)
+        delta = nbr[:, sl] - y[:, None, :]          # (bb, size, d)
+        edge, wsum = _edge_wsum(delta, coef[:, sl], alpha, mode)
+        if emit_edges[s]:
+            edge_refs[e_i][...] = edge
+            e_i += 1
+        agg_refs[s][...] = jnp.sum(edge, axis=1)
+        wsum_refs[s][...] = wsum[:, None]
+        k0 += size
+
+
+@functools.partial(
+    jax.jit, static_argnames=("segments", "emit_edges", "block_b",
+                              "interpret"))
+def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
+                            segments: tuple, emit_edges: tuple = None,
+                            block_b: int = 128, interpret: bool = False):
+    """Index-taking segmented force kernel.
+
+    Args:
+      x: (N, d) embedding, kept in HBM/ANY memory space.
+      qid: (B,) int32 row ids of the points the forces act on.
+      nbr_idx: (B, K) int32 neighbour ids, K = sum of segment sizes;
+        clipped to [0, N) (callers zero invalid slots via ``coef``).
+      coef: (B, K) f32 per-edge coefficients.
+      alpha: traced scalar tail parameter.
+      segments: static tuple of ``(mode, size)`` pairs partitioning the
+        neighbour axis, mode in {'attraction', 'repulsion'}.
+      emit_edges: static per-segment bools (default: all True); a False
+        segment skips its (B, K_s, d) edge output entirely -- no HBM
+        write for edges the caller would discard (e.g. negative samples,
+        whose symmetric contribution is never scattered).
+    Returns (one entry per segment -- no packed buffers, so consumers
+    never pay a concat/re-slice round-trip):
+      aggs: tuple of (B, d) per-point aggregate forces,
+      edges: tuple of (B, K_s, d) per-edge forces (for the scatter-free
+        symmetrisation outside the kernel); ``None`` where
+        ``emit_edges[s]`` is False,
+      wsums: tuple of (B,) w partial sums (Z-hat estimator terms).
+    """
+    N, d = x.shape
+    B, K = nbr_idx.shape
+    S = len(segments)
+    if emit_edges is None:
+        emit_edges = (True,) * S
+    assert len(emit_edges) == S, (emit_edges, segments)
+    assert K == sum(size for _, size in segments), (K, segments)
+    assert all(mode in ("attraction", "repulsion") for mode, _ in segments)
+    assert all(size > 0 for _, size in segments), segments
+
+    qid = jnp.clip(qid.astype(jnp.int32), 0, N - 1)
+    nbr_idx = jnp.clip(nbr_idx.astype(jnp.int32), 0, N - 1)
+    coef = coef.astype(jnp.float32)
+
+    block_b = min(block_b, _round_up(B, 8))
+    while block_b > 8 and (K + 1) * block_b * d * x.dtype.itemsize \
+            > 8 * 2 ** 20:
+        block_b //= 2
+    Bp = _round_up(B, block_b)
+    if Bp != B:
+        qid = jnp.pad(qid, (0, Bp - B))
+        nbr_idx = jnp.pad(nbr_idx, ((0, Bp - B), (0, 0)))
+        coef = jnp.pad(coef, ((0, Bp - B), (0, 0)))
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+
+    grid = (Bp // block_b,)
+    emitted_sizes = [size for (_, size), em in zip(segments, emit_edges)
+                     if em]
+    E = len(emitted_sizes)
+    outs = pl.pallas_call(
+        functools.partial(_ne_forces_gather_kernel, segments=segments,
+                          emit_edges=emit_edges),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=(
+            [pl.BlockSpec((block_b, d), lambda i: (i, 0))] * S
+            + [pl.BlockSpec((block_b, size, d), lambda i: (i, 0, 0))
+               for size in emitted_sizes]
+            + [pl.BlockSpec((block_b, 1), lambda i: (i, 0))] * S
+        ),
+        out_shape=(
+            [jax.ShapeDtypeStruct((Bp, d), jnp.float32)] * S
+            + [jax.ShapeDtypeStruct((Bp, size, d), jnp.float32)
+               for size in emitted_sizes]
+            + [jax.ShapeDtypeStruct((Bp, 1), jnp.float32)] * S
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, d), x.dtype),
+            pltpu.VMEM((block_b, K, d), x.dtype),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+        interpret=interpret,
+    )(qid, nbr_idx, alpha_arr, coef, x)
+    aggs = tuple(o[:B] for o in outs[:S])
+    edge_iter = iter(outs[S:S + E])
+    edges = tuple(next(edge_iter)[:B] if em else None for em in emit_edges)
+    wsums = tuple(o[:B, 0] for o in outs[S + E:])
+    return aggs, edges, wsums

@@ -3,8 +3,9 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.ne_forces.kernel import ne_forces_pallas
-from repro.kernels.ne_forces.ref import ne_forces_ref
+from repro.kernels.ne_forces.kernel import (ne_forces_gather_pallas,
+                                            ne_forces_pallas)
+from repro.kernels.ne_forces.ref import ne_forces_gather_ref, ne_forces_ref
 
 
 def _default_backend() -> str:
@@ -25,4 +26,37 @@ def ne_forces(y, nbr, coef, alpha, *, mode: str, backend: str = "auto"):
         return ne_forces_pallas(y, nbr, coef, alpha, mode=mode, interpret=True)
     if backend == "xla":
         return ne_forces_ref(y, nbr, coef, alpha, mode=mode)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def ne_forces_gather(x, qid, nbr_idx, coef, alpha, *, segments,
+                     emit_edges=None, backend: str = "auto"):
+    """Index-taking, segmented force evaluation in ONE launch.
+
+    Unlike :func:`ne_forces` the (B, K, d) gathered neighbour buffer is
+    never materialised in HBM, and several neighbour segments (e.g. HD
+    attraction + LD repulsion + negative samples) are evaluated over the
+    concatenated neighbour axis in a single kernel launch: one read of the
+    embedding instead of three.  ``segments`` is a static tuple of
+    ``(mode, size)`` pairs; returns per-segment tuples (aggs, edges,
+    wsums) -- see ref.py for semantics.
+    """
+    segments = tuple((str(m), int(s)) for m, s in segments)
+    if emit_edges is not None:
+        emit_edges = tuple(bool(e) for e in emit_edges)
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "pallas":
+        return ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha,
+                                       segments=segments,
+                                       emit_edges=emit_edges)
+    if backend == "interpret":
+        return ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha,
+                                       segments=segments,
+                                       emit_edges=emit_edges,
+                                       interpret=True)
+    if backend == "xla":
+        return ne_forces_gather_ref(x, qid, nbr_idx, coef, alpha,
+                                    segments=segments,
+                                    emit_edges=emit_edges)
     raise ValueError(f"unknown backend {backend!r}")

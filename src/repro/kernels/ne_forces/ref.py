@@ -45,3 +45,35 @@ def ne_forces_ref(y, nbr, coef, alpha, *, mode: str):
         wsum = jnp.sum(c32 * w, axis=-1)
     agg = jnp.sum(edge, axis=1)                # (B, d)
     return agg, edge, wsum
+
+
+def ne_forces_gather_ref(x, qid, nbr_idx, coef, alpha, *, segments: tuple,
+                         emit_edges: tuple = None):
+    """Index-taking, segmented oracle (see kernel.py for the TPU version).
+
+    ``segments`` is a static tuple of (mode, size) pairs partitioning the
+    neighbour axis; each segment is evaluated with :func:`ne_forces_ref`
+    semantics.  Returns per-segment tuples (aggs, edges, wsums) -- never
+    packed, so the XLA fallback pays no concat/re-slice round-trip.  The
+    (cheap, int32) *index* array is sliced per segment and each segment
+    gathered separately: slicing a big gathered f32 buffer would cost a
+    copy per segment on the XLA path.  ``edges[s]`` is None where
+    ``emit_edges[s]`` is False (kernel.py skips those HBM writes; here we
+    just don't return the buffer, letting XLA dead-code it).
+    """
+    if emit_edges is None:
+        emit_edges = (True,) * len(segments)
+    n = x.shape[0]
+    y = x[jnp.clip(qid, 0, n - 1)]
+    aggs, edges, wsums = [], [], []
+    k0 = 0
+    for (mode, size), em in zip(segments, emit_edges):
+        sl = slice(k0, k0 + size)
+        nbr_s = x[jnp.clip(nbr_idx[:, sl], 0, n - 1)]
+        agg, edge, wsum = ne_forces_ref(y, nbr_s, coef[:, sl], alpha,
+                                        mode=mode)
+        aggs.append(agg)
+        edges.append(edge if em else None)
+        wsums.append(wsum)
+        k0 += size
+    return tuple(aggs), tuple(edges), tuple(wsums)

@@ -19,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _sqdist_kernel(q_ref, c_ref, out_ref):
@@ -82,3 +83,138 @@ def pairwise_sqdist_pallas(
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+# --------------------------------------------------------------------------
+# Gather-fused variant: the kernel takes *indices*, not gathered operands.
+#
+# The pre-gather kernel above forces XLA to materialise X[cand] as an
+# (B, C, M) HBM buffer (C+1 copies of every touched row) which the kernel
+# then streams from HBM a second time.  Here X stays in HBM/ANY memory and
+# each (block_b, block_m) grid step DMAs only the block_b * (C+1) row chunks
+# it needs straight into VMEM scratch: per-iteration HBM traffic drops from
+# write+read of the gathered buffer to a single gather-read, and the (N,C,M)
+# intermediate disappears from the memory high-water mark.
+#
+# The index slab is staged into SMEM by the pipeline (BlockSpec with
+# memory_space=SMEM) so DMA source addresses are scalar reads; SMEM
+# footprint is O(block_b * C), never O(B).  All row-chunk DMAs of a grid
+# step are issued back-to-back on one semaphore and drained in issue order
+# -- with per-row destination slots there is no WAR hazard, so a full
+# in-flight window beats a 2-slot double buffer.
+
+
+def _sqdist_gather_kernel(qid_ref, cand_ref, x_ref, out_ref, q_scr, c_scr,
+                          sem, *, m_size: int, block_m: int):
+    """One (block_b, block_m) tile: gather rows by index, then accumulate.
+
+    qid_ref: (block_b,) SMEM        query row ids
+    cand_ref: (block_b, C) SMEM     candidate row ids
+    x_ref: (N, M) ANY               source matrix (stays in HBM)
+    out_ref: (block_b, C) VMEM      squared-distance accumulator
+    q_scr: (block_b, block_m), c_scr: (block_b, C, block_m) VMEM scratch
+    """
+    j = pl.program_id(1)
+    block_b, C = out_ref.shape
+    # Ragged M: clamp the last chunk's start so the DMA stays in bounds and
+    # mask the columns the previous chunk already covered.
+    m0 = jnp.minimum(j * block_m, m_size - block_m)
+
+    def q_dma(r):
+        return pltpu.make_async_copy(
+            x_ref.at[qid_ref[r], pl.ds(m0, block_m)], q_scr.at[r], sem)
+
+    def c_dma(r, k):
+        return pltpu.make_async_copy(
+            x_ref.at[cand_ref[r, k], pl.ds(m0, block_m)], c_scr.at[r, k],
+            sem)
+
+    def issue(r, _):
+        q_dma(r).start()
+        jax.lax.fori_loop(0, C, lambda k, x: (c_dma(r, k).start(), x)[1],
+                          None)
+        return _
+
+    def drain(r, _):
+        q_dma(r).wait()
+        jax.lax.fori_loop(0, C, lambda k, x: (c_dma(r, k).wait(), x)[1],
+                          None)
+        return _
+
+    jax.lax.fori_loop(0, block_b, issue, None)
+    jax.lax.fori_loop(0, block_b, drain, None)
+
+    q = q_scr[...].astype(jnp.float32)              # (block_b, block_m)
+    c = c_scr[...].astype(jnp.float32)              # (block_b, C, block_m)
+    diff = q[:, None, :] - c
+    col = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 2)
+    fresh = (m0 + col) >= j * block_m               # not already accumulated
+    partial = jnp.sum(jnp.where(fresh, diff * diff, 0.0), axis=-1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_m", "interpret"))
+def pairwise_sqdist_gather_pallas(
+    x: jnp.ndarray,
+    qid: jnp.ndarray,
+    cand: jnp.ndarray,
+    *,
+    block_b: int = 128,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(N, M), (B,), (B, C) -> (B, C) f32: ``||X[qid[b]] - X[cand[b,j]]||^2``.
+
+    Indices are clipped to [0, N); callers mask invalid slots themselves
+    (SENTINEL handling lives in the KNN merge).  B is padded to ``block_b``
+    with row-0 gathers that are dropped on exit; M is tiled at ``block_m``
+    with a clamped+masked final chunk, so X is never padded or copied.
+    """
+    N, M = x.shape
+    B, = qid.shape
+    Bc, C = cand.shape
+    assert Bc == B, (qid.shape, cand.shape)
+
+    qid = jnp.clip(qid.astype(jnp.int32), 0, N - 1)
+    cand = jnp.clip(cand.astype(jnp.int32), 0, N - 1)
+
+    block_m = min(block_m, M)
+    block_b = min(block_b, _round_up(B, 8))
+    # keep the (C+1) row-chunk scratch slab comfortably inside VMEM
+    while block_b > 8 and (C + 1) * block_b * block_m * x.dtype.itemsize \
+            > 8 * 2 ** 20:
+        block_b //= 2
+    Bp = _round_up(B, block_b)
+    if Bp != B:
+        qid = jnp.pad(qid, (0, Bp - B))
+        cand = jnp.pad(cand, ((0, Bp - B), (0, 0)))
+
+    grid = (Bp // block_b, _round_up(M, block_m) // block_m)
+    out = pl.pallas_call(
+        functools.partial(_sqdist_gather_kernel, m_size=M, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, C), lambda i, j: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, C), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, block_m), x.dtype),
+            pltpu.VMEM((block_b, C, block_m), x.dtype),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+        interpret=interpret,
+    )(qid, cand, x)
+    return out[:B]

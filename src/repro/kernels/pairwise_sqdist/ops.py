@@ -10,8 +10,10 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.pairwise_sqdist.kernel import pairwise_sqdist_pallas
-from repro.kernels.pairwise_sqdist.ref import pairwise_sqdist_ref
+from repro.kernels.pairwise_sqdist.kernel import (
+    pairwise_sqdist_gather_pallas, pairwise_sqdist_pallas)
+from repro.kernels.pairwise_sqdist.ref import (
+    pairwise_sqdist_gather_ref, pairwise_sqdist_ref)
 
 
 def _default_backend() -> str:
@@ -32,4 +34,23 @@ def pairwise_sqdist(q, c, *, backend: str = "auto"):
         return pairwise_sqdist_pallas(q, c, interpret=True)
     if backend == "xla":
         return pairwise_sqdist_ref(q, c)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def pairwise_sqdist_gather(x, qid, cand, *, backend: str = "auto"):
+    """Index-taking squared distances: ``||x[qid[b]] - x[cand[b, j]]||^2``.
+
+    Unlike :func:`pairwise_sqdist` the (B, C, M) gathered operand is never
+    materialised in HBM -- the Pallas kernel DMAs the needed rows per block.
+    The 'xla' path is the pure-jnp fallback used on CPU and as the dry-run
+    lowering; it gathers explicitly but keeps the same semantics.
+    """
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "pallas":
+        return pairwise_sqdist_gather_pallas(x, qid, cand)
+    if backend == "interpret":
+        return pairwise_sqdist_gather_pallas(x, qid, cand, interpret=True)
+    if backend == "xla":
+        return pairwise_sqdist_gather_ref(x, qid, cand)
     raise ValueError(f"unknown backend {backend!r}")

@@ -17,3 +17,21 @@ def pairwise_sqdist_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     c32 = c.astype(jnp.float32)
     diff = q32[:, None, :] - c32
     return jnp.sum(diff * diff, axis=-1)
+
+
+def pairwise_sqdist_gather_ref(x: jnp.ndarray, qid: jnp.ndarray,
+                               cand: jnp.ndarray) -> jnp.ndarray:
+    """Index-taking oracle: gathers (with clipping) then calls the ref.
+
+    Args:
+      x: (N, M) source matrix.
+      qid: (B,) int32 query row ids.
+      cand: (B, C) int32 candidate row ids.
+    Returns:
+      (B, C) float32 ``||x[qid[b]] - x[cand[b, j]]||^2``.  Indices are
+      clipped to [0, N); invalid slots are the caller's concern.
+    """
+    n = x.shape[0]
+    q = x[jnp.clip(qid, 0, n - 1)]
+    c = x[jnp.clip(cand, 0, n - 1)]
+    return pairwise_sqdist_ref(q, c)

@@ -156,14 +156,18 @@ def _dot_flops(line: str, result_type: str, shapes: Dict[str, str]) -> float:
     k = 1
     mc = _LHS_CDIMS.search(line)
     if args and mc:
-        ops = [a.strip().lstrip("%") for a in args.group(1).split(",")]
-        lhs_type = shapes.get(ops[0]) if ops else None
-        if lhs_type:
-            sh = _first_shape(lhs_type)
-            if sh:
-                for ci in [int(c) for c in mc.group(1).split(",") if c]:
-                    if ci < len(sh[1]):
-                        k *= sh[1][ci]
+        argstr = args.group(1)
+        # newer XLA prints operand types inline: dot(f32[256,256]{1,0} %a,
+        # ...); older text is name-only: dot(%a, %b) -> look the type up
+        sh = _first_shape(argstr)
+        if sh is None:
+            ops = [a.strip().lstrip("%") for a in argstr.split(",")]
+            lhs_type = shapes.get(ops[0]) if ops else None
+            sh = _first_shape(lhs_type) if lhs_type else None
+        if sh:
+            for ci in [int(c) for c in mc.group(1).split(",") if c]:
+                if ci < len(sh[1]):
+                    k *= sh[1][ci]
     return 2.0 * n_out * k
 
 

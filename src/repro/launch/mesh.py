@@ -10,15 +10,16 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-from jax.sharding import AxisType, NamedSharding
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple:

@@ -23,6 +23,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models.common import ShardCtx, dense_init
 
 
@@ -191,7 +193,7 @@ def mamba2_apply(p, h, cfg, ctx: ShardCtx, *, cache=None, use_reference=False):
             def fn(xh_, dt_, A_, Bm_, Cm_, Dsk_):
                 inner = lambda *a: _ssd_chunk_scan(
                     *a, chunk=min(cfg.ssm_chunk, S))
-                return jax.shard_map(
+                return compat.shard_map(
                     inner, mesh=ctx.mesh,
                     in_specs=(P(b, None, None, m), P(b, None, None), P(None),
                               P(b, None, None), P(b, None, None), P(None)),

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models.common import ShardCtx, dense_init, swiglu
 
 
@@ -201,7 +203,7 @@ def moe_apply_a2a(p, x, cfg, ctx: ShardCtx):
         return out.reshape(Bl, Sl, D), aux
 
     baxes = ctx.batch_spec
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(), P(ctx.model, None, None), P(ctx.model, None, None),
                   P(ctx.model, None, None), P(baxes, ctx.model, None)),

@@ -17,7 +17,8 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def remesh(n_devices: int, *, model: int = 16, axis_names=("data", "model")):
@@ -26,11 +27,7 @@ def remesh(n_devices: int, *, model: int = 16, axis_names=("data", "model")):
         model = n_devices
     data = n_devices // model
     devices = jax.devices()[: data * model]
-    import numpy as np
-    arr = np.array(devices).reshape(data, model)
-    return jax.sharding.Mesh(
-        arr, axis_names,
-        axis_types=(AxisType.Auto,) * len(axis_names))
+    return compat.make_mesh((data, model), axis_names, devices=devices)
 
 
 def surviving_pods(heartbeats: dict, timeout_s: float, now: float) -> list:

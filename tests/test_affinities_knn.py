@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import affinities, knn as knn_lib
 from repro.core.knn import SENTINEL
@@ -112,7 +112,7 @@ def test_exact_knn_correct():
 def test_nnd_converges_on_overlapping_blobs():
     X, _ = blobs(n=400, dim=16, n_centers=5, center_std=1.0, blob_std=1.0,
                  seed=0)
-    idx, d, hist = nnd(X, NNDConfig(k=10, backend="xla"), max_iter=25)
+    idx, d, hist = nnd(X, NNDConfig(k=10, backend="xla"), max_iter=50)
     from repro.core.quality import knn_set_quality
     q = float(knn_set_quality(idx, jnp.asarray(X)))
     assert q > 0.95, q

@@ -27,15 +27,15 @@ def _run(code: str, timeout=560):
 def test_funcsne_distributed_step_improves_knn():
     out = _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro import compat
         from repro.data.synthetic import blobs
         from repro.core import funcsne
         from repro.core.quality import knn_set_quality
 
         X, _ = blobs(n=512, dim=16, n_centers=5, center_std=6.0)
         Xj = jnp.asarray(X)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         cfg = funcsne.FuncSNEConfig(n_points=512, dim_hd=16)
         st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
         q0 = float(knn_set_quality(st.hd_idx, Xj))
@@ -56,13 +56,13 @@ def test_funcsne_distributed_step_improves_knn():
 def test_lm_train_step_compiles_and_runs_on_mesh():
     out = _run("""
         import dataclasses, jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.configs.base import get_arch, smoke_variant
         from repro.launch.mesh import sanitize_spec, tree_shardings
         from repro.launch.steps import (batch_struct, make_model,
                                         make_optimizer, make_train_step)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         cfg = dataclasses.replace(smoke_variant(get_arch("olmoe-1b-7b")),
                                   attn_chunk_k=64)
         model = make_model(cfg, mesh)
@@ -89,14 +89,13 @@ def test_lm_train_step_compiles_and_runs_on_mesh():
 def test_checkpoint_elastic_reshard():
     out = _run("""
         import tempfile, jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.checkpoint import Checkpointer
 
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
-        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2,
-                              devices=jax.devices()[:4])
+        mesh8 = compat.make_mesh((4, 2), ("data", "model"))
+        mesh4 = compat.make_mesh((2, 2), ("data", "model"),
+                                 devices=jax.devices()[:4])
         t = {"w": jax.device_put(jnp.arange(64, dtype=jnp.float32)
                                  .reshape(8, 8),
                                  NamedSharding(mesh8, P("data", "model")))}
@@ -117,11 +116,10 @@ def test_checkpoint_elastic_reshard():
 def test_multipod_gradient_compression_psum():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro import compat
         from repro.optim.compression import (compress_with_error_feedback,
                                              init_ef)
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("pod", "data"))
 
         def allreduce_compressed(g, ef):
             sparse, ef, dens = compress_with_error_feedback(
@@ -129,7 +127,7 @@ def test_multipod_gradient_compression_psum():
             summed = jax.lax.psum(sparse["g"], "pod")
             return summed, ef
 
-        f = jax.shard_map(
+        f = compat.shard_map(
             lambda g, r: (jax.lax.psum(g, "pod"), r),
             mesh=mesh, in_specs=(jax.sharding.PartitionSpec("pod"),
                                  jax.sharding.PartitionSpec()),

@@ -4,14 +4,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.ne_forces.kernel import ne_forces_pallas
-from repro.kernels.ne_forces.ref import ne_forces_ref
-from repro.kernels.pairwise_sqdist.kernel import pairwise_sqdist_pallas
-from repro.kernels.pairwise_sqdist.ref import pairwise_sqdist_ref
+from repro.kernels.ne_forces.kernel import (ne_forces_gather_pallas,
+                                            ne_forces_pallas)
+from repro.kernels.ne_forces.ref import ne_forces_gather_ref, ne_forces_ref
+from repro.kernels.pairwise_sqdist.kernel import (
+    pairwise_sqdist_gather_pallas, pairwise_sqdist_pallas)
+from repro.kernels.pairwise_sqdist.ref import (pairwise_sqdist_gather_ref,
+                                               pairwise_sqdist_ref)
 
 
 @pytest.mark.parametrize("b,c,m", [(8, 4, 16), (37, 11, 19), (64, 16, 128),
@@ -41,6 +44,125 @@ def test_ne_forces_sweep(b, k, d, mode, alpha):
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# Gather-fused (index-taking) kernel variants
+
+
+@pytest.mark.parametrize("n,m,b,c,bb,bm", [
+    (50, 19, 37, 5, 16, 8),      # everything ragged; M not a mult of bm
+    (64, 128, 64, 7, 32, 128),   # exact tiling, unpadded B
+    (40, 300, 33, 3, 8, 128),    # padded B + clamped+masked final M chunk
+    (30, 2, 30, 9, 16, 512),     # tiny M (the LD-space case)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_sqdist_gather_sweep(n, m, b, c, bb, bm, dtype):
+    rng = np.random.default_rng(n + m + b)
+    x = jnp.asarray(rng.normal(size=(n, m)), dtype)
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    # include out-of-range ids: the kernel must clip exactly like the ref
+    cand = jnp.asarray(rng.integers(-2, n + 3, (b, c)).astype(np.int32))
+    got = pairwise_sqdist_gather_pallas(x, qid, cand, block_b=bb,
+                                        block_m=bm, interpret=True)
+    want = pairwise_sqdist_gather_ref(x, qid, cand)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * m)
+
+
+def test_pairwise_sqdist_gather_matches_pregather():
+    """Same answer as the pre-gather kernel fed the explicit X[cand]."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(60, 23)).astype(np.float32))
+    qid = jnp.arange(41, dtype=jnp.int32)
+    cand = jnp.asarray(rng.integers(0, 60, (41, 6)).astype(np.int32))
+    got = pairwise_sqdist_gather_pallas(x, qid, cand, block_b=16,
+                                        block_m=16, interpret=True)
+    want = pairwise_sqdist_pallas(x[qid], x[cand], interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("segments", [
+    (("attraction", 5),),
+    (("repulsion", 4),),
+    (("attraction", 4), ("repulsion", 3), ("repulsion", 2)),
+])
+@pytest.mark.parametrize("b,d,bb", [(37, 2, 16),    # padded B, vis-scale d
+                                    (64, 8, 32),    # unpadded B
+                                    (21, 16, 8)])
+@pytest.mark.parametrize("alpha", [0.4, 1.0, 3.0])
+def test_ne_forces_gather_sweep(segments, b, d, bb, alpha):
+    k = sum(s for _, s in segments)
+    rng = np.random.default_rng(b * 10 + d)
+    n = 50
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    nbr = jnp.asarray(rng.integers(-1, n + 2, (b, k)).astype(np.int32))
+    coef = jnp.asarray(rng.random((b, k)).astype(np.float32))
+    got = ne_forces_gather_pallas(x, qid, nbr, coef, alpha,
+                                  segments=segments, block_b=bb,
+                                  interpret=True)
+    want = ne_forces_gather_ref(x, qid, nbr, coef, alpha, segments=segments)
+    for gs, ws, name in zip(got, want, ("agg", "edge", "wsum")):
+        for s, (g, w) in enumerate(zip(gs, ws)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{name}[{s}]")
+
+
+def test_ne_forces_gather_matches_per_mode_launches():
+    """One segmented launch == three independent pre-gather launches."""
+    rng = np.random.default_rng(9)
+    n, b, d = 48, 30, 4
+    sizes, modes = (6, 5, 3), ("attraction", "repulsion", "repulsion")
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    nbr = jnp.asarray(rng.integers(0, n, (b, sum(sizes))).astype(np.int32))
+    coef = jnp.asarray(rng.random((b, sum(sizes))).astype(np.float32))
+    aggs, edges, wsums = ne_forces_gather_pallas(
+        x, qid, nbr, coef, 1.3, segments=tuple(zip(modes, sizes)),
+        block_b=16, interpret=True)
+    k0 = 0
+    for s, (mode, size) in enumerate(zip(modes, sizes)):
+        sl = slice(k0, k0 + size)
+        agg_s, edge_s, wsum_s = ne_forces_pallas(
+            x[qid], x[nbr[:, sl]], coef[:, sl], 1.3, mode=mode,
+            block_b=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(aggs[s]), np.asarray(agg_s),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(edges[s]),
+                                   np.asarray(edge_s), rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(wsums[s]),
+                                   np.asarray(wsum_s), rtol=2e-5, atol=2e-5)
+        k0 += size
+
+
+def test_ne_forces_gather_emit_edges_skips_output():
+    """emit_edges=False segments return None edges; everything else is
+    unchanged vs the all-edges launch."""
+    rng = np.random.default_rng(11)
+    n, b, d = 40, 24, 3
+    seg = (("attraction", 5), ("repulsion", 4))
+    k = 9
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    nbr = jnp.asarray(rng.integers(0, n, (b, k)).astype(np.int32))
+    coef = jnp.asarray(rng.random((b, k)).astype(np.float32))
+    full = ne_forces_gather_pallas(x, qid, nbr, coef, 0.9, segments=seg,
+                                   block_b=8, interpret=True)
+    part = ne_forces_gather_pallas(x, qid, nbr, coef, 0.9, segments=seg,
+                                   emit_edges=(True, False), block_b=8,
+                                   interpret=True)
+    assert part[1][1] is None
+    np.testing.assert_allclose(np.asarray(part[1][0]),
+                               np.asarray(full[1][0]), rtol=1e-6)
+    for which in (0, 2):    # aggs, wsums identical
+        for s in range(2):
+            np.testing.assert_allclose(np.asarray(part[which][s]),
+                                       np.asarray(full[which][s]),
+                                       rtol=1e-6)
 
 
 def test_ne_forces_action_reaction():
