@@ -1,12 +1,15 @@
-"""Microbenchmark: pre-gather vs gather-fused kernel data paths.
+"""Microbenchmark: pre-gather vs gather-fused vs scatter-fused data paths.
 
-Two comparisons, at N in {2k, 16k} with C/K at FuncSNEConfig defaults:
+Three comparisons, at N in {2k, 16k} with C/K at FuncSNEConfig defaults:
 
   * ``pairwise_sqdist``: explicit ``X[cand]`` + pre-gather kernel vs the
     index-taking ``pairwise_sqdist_gather``.
   * ``ne_forces``: three per-mode launches on explicit ``Y[idx]`` buffers
     (HD attraction / LD repulsion / negatives) vs ONE segmented
     ``ne_forces_gather`` launch over the concatenated neighbour axis.
+  * force *epilogue*: the edge-emitting launch + three XLA ``.at[].add``
+    symmetrisation scatters vs the scatter-fused launch whose (N, d)
+    per-segment partials make the displacement field three AXPYs.
 
 Wall-clock here times the *XLA lowering* of both paths end-to-end (the
 Pallas kernels target TPU; interpret mode is an interpreter, so its
@@ -14,14 +17,24 @@ wall-clock is meaningless).  The derived column carries the roofline
 entry: modeled per-call HBM bytes on TPU, where the pre-gather path pays
 write+read of the gathered operand that the gather-fused kernel never
 materialises -- the actual TPU win the rewiring is after.
+
+Run directly (``python -m benchmarks.bench_kernels --smoke --json f.json``)
+this module is its own harness: unlike ``benchmarks.run`` it does NOT
+swallow exceptions, so CI uses ``--smoke`` (tiny shapes) as a
+kernel-launch regression gate that actually fails the workflow.
 """
+import argparse
+import json
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.funcsne import FuncSNEConfig
-from repro.kernels.ne_forces.ref import ne_forces_gather_ref, ne_forces_ref
+from repro.kernels.ne_forces.ref import (ne_forces_gather_ref, ne_forces_ref,
+                                         ne_forces_scatter_ref)
 from repro.kernels.pairwise_sqdist.ref import (pairwise_sqdist_gather_ref,
                                                pairwise_sqdist_ref)
 
@@ -135,4 +148,142 @@ def run(ns=(2048, 16384), m=192, repeats=10):
         ratio = us_pre / max(us_gat, 1e-9)
         rows.append(row(f"kbench_forces_xla_ratio_n{n}", ratio,
                         f"pregather_us/fused_us={ratio:.3f} (ratio, not us)"))
+
+        # ---- force epilogue: edge-emitting + .at[].add symmetrisation
+        # scatters vs the scatter-fused (N, d)-partial launch.  Both
+        # produce the final displacement buffer a step consumes; the
+        # scale factors mirror _forces_update's attr_s / rep_s /
+        # rep_s * scale_neg structure.
+        back = (True, True, False)
+
+        def ep_edges(Y, qid, nbr, coef):
+            aggs, edges, wsums = ne_forces_gather_ref(
+                Y, qid, nbr, coef, 1.0, segments=segments,
+                emit_edges=(True, True, False))
+            buf = jnp.zeros((n, d), jnp.float32)
+            buf = buf.at[qid].add(1.5 * aggs[0] + 0.7 * (aggs[1]
+                                                         + 3.0 * aggs[2]))
+            k0 = 0
+            for s, (_, size) in enumerate(segments):
+                if back[s]:
+                    tgt = nbr[:, k0:k0 + size].reshape(-1)
+                    scale = 1.5 if s == 0 else 0.7
+                    buf = buf.at[tgt].add(-(scale
+                                            * edges[s]).reshape(-1, d))
+                k0 += size
+            return buf, wsums[1], wsums[2]
+
+        def ep_scatter(Y, qid, nbr, coef):
+            scats, wsums = ne_forces_scatter_ref(
+                Y, qid, nbr, coef, 1.0, segments=segments,
+                scatter_back=back)
+            buf = 1.5 * scats[0] + 0.7 * scats[1] + (0.7 * 3.0) * scats[2]
+            return buf, wsums[1], wsums[2]
+
+        us_edge, us_scat = _bench_pair(ep_edges, ep_scatter, Y, qid, nbr,
+                                       coef, repeats=n_reps)
+        # TPU HBM model for the symmetrisation epilogue alone: the edge
+        # path writes then scatter-reads two (N, K_s, d) edge buffers;
+        # the scatter-fused path writes G <= 8 per-segment (N, d) grid
+        # partials (the kernel caps the grid to bound exactly this term)
+        # and reads them back once in the XLA sum.
+        g_blocks = min(8, -(-n // 128))
+        b_edge = 2.0 * 4.0 * n * (k_hd + k_ld) * d
+        b_scat = 2.0 * 4.0 * g_blocks * n * d * len(segments)
+        rows.append(row(f"kbench_epilogue_edges_n{n}", us_edge,
+                        f"modeled_tpu_hbm={_mb(b_edge)};scatters=3"))
+        rows.append(row(f"kbench_epilogue_scatter_n{n}", us_scat,
+                        f"modeled_tpu_hbm={_mb(b_scat)};scatters=0"))
+        ratio = us_edge / max(us_scat, 1e-9)
+        rows.append(row(f"kbench_epilogue_xla_ratio_n{n}", ratio,
+                        f"edges_us/scatter_us={ratio:.3f} (ratio, not us)"))
     return rows
+
+
+def smoke_kernel_launches():
+    """Actually launch every Pallas kernel (interpret mode, tiny shapes)
+    and check it against its ref -- the ``run()`` timings above exercise
+    only the XLA refs, so this is what makes ``--smoke`` a *kernel-launch*
+    regression gate rather than a ref-only one.  Raises on any lowering
+    or parity breakage."""
+    from repro.kernels.ne_forces.kernel import (ne_forces_gather_pallas,
+                                                ne_forces_scatter_pallas)
+    from repro.kernels.pairwise_sqdist.kernel import \
+        pairwise_sqdist_gather_pallas
+
+    rng = np.random.default_rng(0)
+    n, b, m, d = 40, 33, 16, 2
+    segments = (("attraction", 4), ("repulsion", 3), ("repulsion", 2))
+    k = 9
+    X = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    cand = jnp.asarray(rng.integers(-1, n + 2, (b, 5)).astype(np.int32))
+    nbr = jnp.asarray(rng.integers(-1, n + 2, (b, k)).astype(np.int32))
+    coef = jnp.asarray(rng.random((b, k)).astype(np.float32))
+
+    def close(a, ref, what):
+        a, ref = np.asarray(a), np.asarray(ref)
+        if not np.allclose(a, ref, rtol=2e-5, atol=2e-5):
+            raise AssertionError(f"smoke parity failed: {what}")
+
+    _, dt = timed(lambda: jax.block_until_ready(
+        pairwise_sqdist_gather_pallas(X, qid, cand, block_b=16, block_m=8,
+                                      interpret=True)))
+    close(pairwise_sqdist_gather_pallas(X, qid, cand, block_b=16,
+                                        block_m=8, interpret=True),
+          pairwise_sqdist_gather_ref(X, qid, cand), "pairwise_sqdist_gather")
+    yield row("ksmoke_launch_sqdist_gather", dt * 1e6, "interpret-mode")
+
+    _, dt = timed(lambda: jax.block_until_ready(
+        ne_forces_gather_pallas(Y, qid, nbr, coef, 1.3, segments=segments,
+                                block_b=16, interpret=True)))
+    got = ne_forces_gather_pallas(Y, qid, nbr, coef, 1.3, segments=segments,
+                                  block_b=16, interpret=True)
+    want = ne_forces_gather_ref(Y, qid, nbr, coef, 1.3, segments=segments)
+    for g, w in zip(got[0] + got[2], want[0] + want[2]):
+        close(g, w, "ne_forces_gather")
+    yield row("ksmoke_launch_forces_gather", dt * 1e6, "interpret-mode")
+
+    back = (True, True, False)
+    _, dt = timed(lambda: jax.block_until_ready(
+        ne_forces_scatter_pallas(Y, qid, nbr, coef, 1.3, segments=segments,
+                                 scatter_back=back, block_b=16,
+                                 interpret=True)))
+    got = ne_forces_scatter_pallas(Y, qid, nbr, coef, 1.3,
+                                   segments=segments, scatter_back=back,
+                                   block_b=16, interpret=True)
+    want = ne_forces_scatter_ref(Y, qid, nbr, coef, 1.3, segments=segments,
+                                 scatter_back=back)
+    for g, w in zip(got[0] + got[1], want[0] + want[1]):
+        close(g, w, "ne_forces_scatter")
+    yield row("ksmoke_launch_forces_scatter", dt * 1e6, "interpret-mode")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + interpret-mode Pallas launches: "
+                         "CI kernel-launch regression gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write {name: us_per_call} JSON to PATH")
+    args = ap.parse_args()
+    kwargs = dict(ns=(256,), m=32, repeats=2) if args.smoke else {}
+    results = {}
+    print("name,us_per_call,derived")
+    rows = run(**kwargs)
+    if args.smoke:
+        rows += list(smoke_kernel_launches())
+    for r in rows:
+        print(r, flush=True)
+        name, us = str(r).split(",")[:2]
+        results[name] = float(us)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {len(results)} results to {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,13 @@ are psum'd -- tensor parallelism for the NE.  Passing ``ctx=AxisCtx()``
         concatenated neighbour axis -- one read of Y and one launch where
         there were three of each; per-segment outputs avoid any
         concat/re-slice round-trip at the call site.
+  H14   scatter-fused force epilogue: the symmetrisation (each directed
+        edge acting on both endpoints) is accumulated *inside* the force
+        kernel into per-segment (N, d) displacement-field partials, so
+        the per-edge (n, K, d) force tensors and the ``.at[tgt].add``
+        scatters that consumed them vanish -- the step's last per-edge
+        HBM round-trip.  ``cfg.scatter_fused=False`` restores the
+        edge-emitting epilogue (kept for equivalence tests / A-B benches).
 """
 from __future__ import annotations
 
@@ -98,6 +105,11 @@ class FuncSNEConfig:
     # rows in-kernel; False re-materialises X[cand]/Y[idx] per launch
     # (legacy pre-gather wiring, kept for equivalence tests and A/B benches)
     gather_fused: bool = True
+    # scatter-fused force epilogue (§Perf H14): symmetrisation edges are
+    # accumulated in-kernel into (N, d) partials; False keeps the
+    # edge-emitting kernel + XLA ``.at[].add`` scatters.  Only takes
+    # effect with gather_fused (the scatter kernel is index-taking).
+    scatter_fused: bool = True
 
     @property
     def c_hd(self) -> int:
@@ -367,28 +379,52 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
     coef_r = 0.5 * (ld_valid & act_l[:, None]).astype(jnp.float32)
 
     # ---- far-field via negative sampling (third term of Eq. 6)
-    neg = knn_lib.sample_uniform(rng, n_loc, n, cfg.n_negatives)
-    neg = jnp.where(neg == ids[:, None], (neg + 1) % n, neg)
-    coef_n = (_take(st.active, neg) & act_l[:, None]).astype(jnp.float32)
-    scale_neg = jnp.maximum(n_act - 1.0 - cfg.k_ld, 1.0) / cfg.n_negatives
+    # n_negatives=0 drops the far field entirely (static config): used by
+    # the momentum-conservation tests, where every edge is symmetrised.
+    have_neg = cfg.n_negatives > 0
+    if have_neg:
+        neg = knn_lib.sample_uniform(rng, n_loc, n, cfg.n_negatives)
+        neg = jnp.where(neg == ids[:, None], (neg + 1) % n, neg)
+        coef_n = (_take(st.active, neg) & act_l[:, None]).astype(jnp.float32)
+        scale_neg = jnp.maximum(n_act - 1.0 - cfg.k_ld, 1.0) / cfg.n_negatives
+    else:
+        scale_neg = jnp.float32(0.0)
 
+    scatter_fused = cfg.gather_fused and cfg.scatter_fused
     if cfg.gather_fused:
         # §Perf H13: ONE batched launch over the concatenated neighbour
         # axis replaces the three per-step force launches; y_l is read
         # once (DMA'd in-kernel) instead of three gathered (n, K, d)
         # buffers round-tripping through HBM.
-        nbr_idx = jnp.concatenate([hd_i, ld_i, neg], axis=1)
-        coef = jnp.concatenate([coef_a, coef_r, coef_n], axis=1)
-        segments = (("attraction", cfg.k_hd), ("repulsion", cfg.k_ld),
-                    ("repulsion", cfg.n_negatives))
-        # negatives' edges are never scattered back -> skip their HBM write
-        aggs, edges, wsums = ne_forces_gather(st.Y, ids, nbr_idx, coef,
-                                              hp.alpha, segments=segments,
-                                              emit_edges=(True, True, False),
-                                              backend=cfg.backend)
-        agg_a, agg_r, agg_n = aggs
-        edge_a, edge_r, _ = edges
-        _, wsum_r, wsum_n = wsums
+        nbr_idx = jnp.concatenate([hd_i, ld_i] + ([neg] if have_neg else []),
+                                  axis=1)
+        coef = jnp.concatenate([coef_a, coef_r]
+                               + ([coef_n] if have_neg else []), axis=1)
+        segments = (("attraction", cfg.k_hd), ("repulsion", cfg.k_ld)) \
+            + ((("repulsion", cfg.n_negatives),) if have_neg else ())
+        if scatter_fused:
+            # §Perf H14: the kernel bins every edge force (and its
+            # symmetric reaction, except for negatives) straight into
+            # per-segment (n, d) fields -- no per-edge output exists.
+            scats, wsums = ne_forces_gather(
+                st.Y, ids, nbr_idx, coef, hp.alpha, segments=segments,
+                scatter_fused=True,
+                scatter_back=(True, True) + ((False,) if have_neg else ()),
+                backend=cfg.backend)
+        else:
+            # negatives' edges are never scattered back -> skip their HBM
+            # write
+            emit = (True, True) + ((False,) if have_neg else ())
+            aggs, edges, wsums = ne_forces_gather(st.Y, ids, nbr_idx, coef,
+                                                  hp.alpha,
+                                                  segments=segments,
+                                                  emit_edges=emit,
+                                                  backend=cfg.backend)
+            agg_a, agg_r = aggs[0], aggs[1]
+            agg_n = aggs[2] if have_neg else 0.0
+            edge_a, edge_r = edges[0], edges[1]
+        wsum_r = wsums[1]
+        wsum_n = wsums[2] if have_neg else jnp.float32(0.0)
     else:
         y_l = st.Y[ids]
         agg_a, edge_a, _ = ne_forces(y_l, _take(st.Y, hd_i), coef_a,
@@ -397,9 +433,12 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
         agg_r, edge_r, wsum_r = ne_forces(y_l, _take(st.Y, ld_i), coef_r,
                                           hp.alpha, mode="repulsion",
                                           backend=cfg.backend)
-        agg_n, _, wsum_n = ne_forces(y_l, _take(st.Y, neg), coef_n,
-                                     hp.alpha, mode="repulsion",
-                                     backend=cfg.backend)
+        if have_neg:
+            agg_n, _, wsum_n = ne_forces(y_l, _take(st.Y, neg), coef_n,
+                                         hp.alpha, mode="repulsion",
+                                         backend=cfg.backend)
+        else:
+            agg_n, wsum_n = 0.0, jnp.float32(0.0)
 
     # ---- Z estimator:  Z ~= sum_i [ sum_{j in LD_i} w_ij + scale * mean_neg ]
     # (x2 undoes the 0.5 symmetrisation coefficient baked into coef_r)
@@ -414,13 +453,27 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
     # ---- assemble the displacement field (one (N, d) buffer + one psum)
     attr_s = hp.attraction * hp.exaggeration
     rep_s = hp.repulsion / zhat
-    buf = jnp.zeros((n, d), jnp.float32)
-    buf = buf.at[ids].add(attr_s * agg_a + rep_s * (agg_r + scale_neg * agg_n))
-    # scatter-free symmetrisation: each directed edge acts on both endpoints
-    tgt_a = jnp.clip(hd_i, 0, n - 1).reshape(-1)
-    buf = buf.at[tgt_a].add(-(attr_s * edge_a).reshape(-1, d))
-    tgt_r = jnp.clip(ld_i, 0, n - 1).reshape(-1)
-    buf = buf.at[tgt_r].add(-(rep_s * edge_r).reshape(-1, d))
+    if scatter_fused:
+        # §Perf H14: the kernel already binned edge + reaction forces by
+        # row; the epilogue is three AXPYs on (n, d) partials -- the
+        # ``.at[].add`` scatters below (and the edge tensors feeding
+        # them) no longer exist.
+        buf = attr_s * scats[0] + rep_s * scats[1]
+        if have_neg:
+            buf = buf + (rep_s * scale_neg) * scats[2]
+    else:
+        buf = jnp.zeros((n, d), jnp.float32)
+        if have_neg:
+            agg_q = attr_s * agg_a + rep_s * (agg_r + scale_neg * agg_n)
+        else:
+            agg_q = attr_s * agg_a + rep_s * agg_r
+        buf = buf.at[ids].add(agg_q)
+        # scatter-free symmetrisation: each directed edge acts on both
+        # endpoints
+        tgt_a = jnp.clip(hd_i, 0, n - 1).reshape(-1)
+        buf = buf.at[tgt_a].add(-(attr_s * edge_a).reshape(-1, d))
+        tgt_r = jnp.clip(ld_i, 0, n - 1).reshape(-1)
+        buf = buf.at[tgt_r].add(-(rep_s * edge_r).reshape(-1, d))
     if ctx.all_rows is not None:
         # §Perf H10a: accumulate locally in f32, cross the wire in bf16
         # (the far field is negative-sampled: force noise >> bf16 error)

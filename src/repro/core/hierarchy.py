@@ -57,9 +57,34 @@ def cluster_graph_edges(levels: List[HierarchyLevel], min_weight: float = 0.1):
     return edges
 
 
+def select_eps(Y, quantile: float, *, max_rows: int = 1024,
+               seed: int = 0) -> float:
+    """DBSCAN ``eps`` = the ``quantile`` of pairwise snapshot distances.
+
+    The full pairwise matrix is O(N^2) memory and time on every level's
+    snapshot, which dominates the sweep long before DBSCAN does; a seeded
+    row subsample caps the cost at O(max_rows^2) while the quantile's
+    sampling error stays well inside DBSCAN's sensitivity to eps
+    (regression-tested against the full-matrix value).
+    """
+    Y = np.asarray(Y)
+    n = Y.shape[0]
+    m = min(n, int(max_rows))
+    idx = np.random.default_rng(seed).choice(n, size=m, replace=False)
+    d = np.sqrt(((Y[idx, None, :] - Y[None, idx, :]) ** 2).sum(-1))
+    pos = d[d > 0]
+    if pos.size == 0:
+        # fully collapsed snapshot (all sampled rows coincide): there is
+        # no distance scale to pick from -- eps 0 makes DBSCAN cluster
+        # exact duplicates instead of crashing on an empty quantile
+        return 0.0
+    return float(np.quantile(pos, quantile))
+
+
 def extract_hierarchy(X, alphas, *, cfg: Optional[funcsne.FuncSNEConfig] = None,
                       iters_per_level: int = 300, warmup_iters: int = 300,
                       eps_quantile: float = 0.02, min_pts: int = 5, rng=None,
+                      eps_sample_rows: int = 1024, eps_seed: int = 0,
                       hparams: Optional[funcsne.HParams] = None,
                       dbscan_fn: Callable = dbscan) -> ClusterGraph:
     """Run the continual optimisation, snapshot per alpha level, and build
@@ -91,11 +116,8 @@ def extract_hierarchy(X, alphas, *, cfg: Optional[funcsne.FuncSNEConfig] = None,
         for _ in range(iters_per_level):
             st = step(st, X, hp)
         Y = np.asarray(jax.device_get(st.Y))
-        # eps from the pairwise-distance quantile of the snapshot
-        idx = np.random.default_rng(0).choice(n, size=min(n, 1024),
-                                              replace=False)
-        d = np.sqrt(((Y[idx, None, :] - Y[None, idx, :]) ** 2).sum(-1))
-        eps = float(np.quantile(d[d > 0], eps_quantile))
+        eps = select_eps(Y, eps_quantile, max_rows=eps_sample_rows,
+                         seed=eps_seed)
         labels, k = relabel_compact(dbscan_fn(Y, eps, min_pts))
         sizes = [int(np.sum(labels == i)) for i in range(k)]
         levels.append(HierarchyLevel(float(alpha), labels, k, sizes))

@@ -126,18 +126,13 @@ def _round_up(x: int, mult: int) -> int:
 # issue order (distinct destination slots -> no WAR hazard).
 
 
-def _ne_forces_gather_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
-                             *refs, segments: tuple, emit_edges: tuple):
-    """qid (bb,) SMEM; nbr (bb, K) SMEM; alpha (1,1) SMEM; coef (bb, K) VMEM;
-    x (N, d) ANY -> per segment s: agg (bb, d), edge (bb, K_s, d) for
-    segments with emit_edges[s], wsum (bb, 1); then scratch
-    (q_scr, n_scr, sem)."""
-    S = len(segments)
-    E = sum(emit_edges)
-    agg_refs = refs[:S]
-    edge_refs = refs[S:S + E]
-    wsum_refs = refs[S + E:2 * S + E]
-    q_scr, n_scr, sem = refs[2 * S + E:]
+def _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr, sem):
+    """Stage x[qid[r]] -> q_scr[r] and x[nbr[r, k]] -> n_scr[r, k] row DMAs.
+
+    Issued back-to-back on one semaphore and drained in issue order
+    (distinct destination slots -> no WAR hazard).  Shared by the
+    edge-emitting and scatter-fused gather kernels.
+    """
     block_b, K, _ = n_scr.shape
 
     def q_dma(r):
@@ -161,6 +156,22 @@ def _ne_forces_gather_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
 
     jax.lax.fori_loop(0, block_b, issue, None)
     jax.lax.fori_loop(0, block_b, drain, None)
+
+
+def _ne_forces_gather_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
+                             *refs, segments: tuple, emit_edges: tuple):
+    """qid (bb,) SMEM; nbr (bb, K) SMEM; alpha (1,1) SMEM; coef (bb, K) VMEM;
+    x (N, d) ANY -> per segment s: agg (bb, d), edge (bb, K_s, d) for
+    segments with emit_edges[s], wsum (bb, 1); then scratch
+    (q_scr, n_scr, sem)."""
+    S = len(segments)
+    E = sum(emit_edges)
+    agg_refs = refs[:S]
+    edge_refs = refs[S:S + E]
+    wsum_refs = refs[S + E:2 * S + E]
+    q_scr, n_scr, sem = refs[2 * S + E:]
+
+    _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr, sem)
 
     alpha = alpha_ref[0, 0]
     y = q_scr[...].astype(jnp.float32)              # (bb, d)
@@ -276,3 +287,168 @@ def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
     edges = tuple(next(edge_iter)[:B] if em else None for em in emit_edges)
     wsums = tuple(o[:B, 0] for o in outs[S + E:])
     return aggs, edges, wsums
+
+
+# --------------------------------------------------------------------------
+# Scatter-fused epilogue.
+#
+# The gather-fused kernel above still *returns* per-edge forces so the
+# caller can symmetrise them (buf.at[nbr].add(-edge)) -- two (B, K, d)
+# HBM round-trips per step that exist only to feed an XLA scatter.  This
+# variant folds the symmetrisation into the kernel: each edge's force is
+# accumulated straight into a per-segment (N, d) displacement-field
+# partial (+edge at the query row, -edge at the neighbour row for
+# symmetrised segments), binned by index with the VMEM accumulate
+# pattern.  Each grid block writes its own (1, N, d) partial slab; the
+# partials are reduced across the grid with one cheap XLA sum, so the
+# only HBM traffic the epilogue pays is G * N * d per segment instead of
+# write+scatter-read of B * K_s * d edges.
+#
+# Segment scale factors (attraction/repulsion/negative-sampling weights)
+# stay *outside*: the repulsion scale depends on the Z estimator, which
+# is computed from this very launch's wsums, so the kernel returns raw
+# per-segment fields and the caller combines them with traced scalars.
+#
+# VMEM note: the (N, d) partial must be resident during a block's sweep,
+# so this kernel targets visualisation-scale d (2..8 padded to the lane
+# tile); at d=2 the slab costs N x 512B per segment, i.e. ~8MB at N=16k.
+# ops.py gates the pallas dispatch on a slab budget and falls back to the
+# XLA segment-sum ref past it (N-chunked in-kernel binning is the
+# ROADMAP item that lifts the cap).
+
+
+def _ne_forces_scatter_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
+                              *refs, segments: tuple, scatter_back: tuple):
+    """qid (bb,) SMEM; nbr (bb, K) SMEM; alpha (1,1) SMEM; coef (bb, K) VMEM;
+    x (N, d) ANY -> per segment s: scat (1, N, d) grid-block partial,
+    wsum (bb, 1); then scratch (q_scr, n_scr, sem)."""
+    S = len(segments)
+    scat_refs = refs[:S]
+    wsum_refs = refs[S:2 * S]
+    q_scr, n_scr, sem = refs[2 * S:]
+    block_b, K, _ = n_scr.shape
+
+    _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr, sem)
+
+    alpha = alpha_ref[0, 0]
+    y = q_scr[...].astype(jnp.float32)              # (bb, d)
+    nbr = n_scr[...].astype(jnp.float32)            # (bb, K, d)
+    coef = coef_ref[...].astype(jnp.float32)        # (bb, K)
+
+    def accumulate(scat_ref, agg, edge, k0, size, back):
+        # Index-binned accumulation: serialised read-modify-writes handle
+        # duplicate targets (negatives / shared neighbours) exactly.
+        def nbr_body(r):
+            def body(k, _):
+                t = nbr_ref[r, k0 + k]
+                scat_ref[0, t] += -edge[r, k]
+                return _
+            jax.lax.fori_loop(0, size, body, None)
+
+        def row_body(r, _):
+            scat_ref[0, qid_ref[r]] += agg[r]
+            if back:
+                nbr_body(r)
+            return _
+
+        jax.lax.fori_loop(0, block_b, row_body, None)
+
+    k0 = 0
+    for s, (mode, size) in enumerate(segments):
+        sl = slice(k0, k0 + size)
+        edge, wsum = _edge_wsum(nbr[:, sl] - y[:, None, :], coef[:, sl],
+                                alpha, mode)
+        wsum_refs[s][...] = wsum[:, None]
+        scat_refs[s][...] = jnp.zeros_like(scat_refs[s])
+        accumulate(scat_refs[s], jnp.sum(edge, axis=1), edge, k0, size,
+                   scatter_back[s])
+        k0 += size
+
+
+@functools.partial(
+    jax.jit, static_argnames=("segments", "scatter_back", "block_b",
+                              "interpret"))
+def ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha, *,
+                             segments: tuple, scatter_back: tuple = None,
+                             block_b: int = None, interpret: bool = False):
+    """Scatter-fused segmented force kernel (see block comment above).
+
+    Args match :func:`ne_forces_gather_pallas` except:
+      scatter_back: static per-segment bools (default: all True); True
+        segments accumulate each edge's reaction force (-edge) into the
+        neighbour's row (the symmetrisation); False segments (e.g.
+        negative samples) contribute only the query-side aggregate.
+    Returns:
+      scats: tuple of (N, d) f32 per-segment displacement-field partials,
+        already reduced over grid blocks -- scats[s][i] carries every
+        force this launch exerts on point i through segment s.  No
+        (B, K_s, d) edge tensor is ever written to HBM.
+      wsums: tuple of (B,) w partial sums (Z-hat estimator terms).
+    """
+    N, d = x.shape
+    B, K = nbr_idx.shape
+    S = len(segments)
+    if scatter_back is None:
+        scatter_back = (True,) * S
+    assert len(scatter_back) == S, (scatter_back, segments)
+    assert K == sum(size for _, size in segments), (K, segments)
+    assert all(mode in ("attraction", "repulsion") for mode, _ in segments)
+    assert all(size > 0 for _, size in segments), segments
+
+    qid = jnp.clip(qid.astype(jnp.int32), 0, N - 1)
+    nbr_idx = jnp.clip(nbr_idx.astype(jnp.int32), 0, N - 1)
+    coef = coef.astype(jnp.float32)
+
+    if block_b is None:
+        # Unlike the edge-emitting kernel, each grid block here writes
+        # S * N * d of partials, so the epilogue's HBM traffic is
+        # G * S * N * d: cap the number of grid blocks (G <= 8) instead
+        # of fixing block_b, keeping the partial traffic below the edge
+        # write+scatter-read it replaces at any B.
+        block_b = max(128, _round_up(-(-B // 8), 8))
+    block_b = min(block_b, _round_up(B, 8))
+    while block_b > 8 and (K + 1) * block_b * d * x.dtype.itemsize \
+            > 8 * 2 ** 20:
+        block_b //= 2
+    Bp = _round_up(B, block_b)
+    if Bp != B:
+        # padded rows carry coef 0 -> exact-zero contributions to row qid[0]
+        qid = jnp.pad(qid, (0, Bp - B))
+        nbr_idx = jnp.pad(nbr_idx, ((0, Bp - B), (0, 0)))
+        coef = jnp.pad(coef, ((0, Bp - B), (0, 0)))
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+
+    G = Bp // block_b
+    outs = pl.pallas_call(
+        functools.partial(_ne_forces_scatter_kernel, segments=segments,
+                          scatter_back=scatter_back),
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=(
+            [pl.BlockSpec((1, N, d), lambda i: (i, 0, 0))] * S
+            + [pl.BlockSpec((block_b, 1), lambda i: (i, 0))] * S
+        ),
+        out_shape=(
+            [jax.ShapeDtypeStruct((G, N, d), jnp.float32)] * S
+            + [jax.ShapeDtypeStruct((Bp, 1), jnp.float32)] * S
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, d), x.dtype),
+            pltpu.VMEM((block_b, K, d), x.dtype),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+        interpret=interpret,
+    )(qid, nbr_idx, alpha_arr, coef, x)
+    # the final cheap XLA reduction of the per-grid-block partials
+    scats = tuple(jnp.sum(o, axis=0) for o in outs[:S])
+    wsums = tuple(o[:B, 0] for o in outs[S:])
+    return scats, wsums

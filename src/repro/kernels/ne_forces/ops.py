@@ -4,8 +4,10 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.ne_forces.kernel import (ne_forces_gather_pallas,
-                                            ne_forces_pallas)
-from repro.kernels.ne_forces.ref import ne_forces_gather_ref, ne_forces_ref
+                                            ne_forces_pallas,
+                                            ne_forces_scatter_pallas)
+from repro.kernels.ne_forces.ref import (ne_forces_gather_ref, ne_forces_ref,
+                                         ne_forces_scatter_ref)
 
 
 def _default_backend() -> str:
@@ -14,6 +16,20 @@ def _default_backend() -> str:
     except Exception:  # pragma: no cover
         platform = "cpu"
     return "pallas" if platform == "tpu" else "xla"
+
+
+# VMEM budget for the scatter kernel's resident per-segment (N, d) slabs.
+# Mosaic pads the trailing dim to the 128-lane tile and these blocks stay
+# resident for a whole grid step, so S * N * 512B at d<=128 must leave
+# room for the neighbour scratch; past this, fall back to the XLA
+# segment-sum ref (HBM-side scatters, still no per-edge contract).
+_SCATTER_VMEM_BUDGET = 10 * 2 ** 20
+
+
+def _scatter_slabs_fit_vmem(x, segments) -> bool:
+    n, d = x.shape
+    lane_padded = -(-d // 128) * 128
+    return len(segments) * n * lane_padded * 4 <= _SCATTER_VMEM_BUDGET
 
 
 def ne_forces(y, nbr, coef, alpha, *, mode: str, backend: str = "auto"):
@@ -30,7 +46,8 @@ def ne_forces(y, nbr, coef, alpha, *, mode: str, backend: str = "auto"):
 
 
 def ne_forces_gather(x, qid, nbr_idx, coef, alpha, *, segments,
-                     emit_edges=None, backend: str = "auto"):
+                     emit_edges=None, scatter_fused: bool = False,
+                     scatter_back=None, backend: str = "auto"):
     """Index-taking, segmented force evaluation in ONE launch.
 
     Unlike :func:`ne_forces` the (B, K, d) gathered neighbour buffer is
@@ -38,14 +55,46 @@ def ne_forces_gather(x, qid, nbr_idx, coef, alpha, *, segments,
     attraction + LD repulsion + negative samples) are evaluated over the
     concatenated neighbour axis in a single kernel launch: one read of the
     embedding instead of three.  ``segments`` is a static tuple of
-    ``(mode, size)`` pairs; returns per-segment tuples (aggs, edges,
-    wsums) -- see ref.py for semantics.
+    ``(mode, size)`` pairs.
+
+    Two output modes:
+      * edge-emitting (default): returns per-segment tuples
+        (aggs, edges, wsums) -- see ref.py for semantics; ``emit_edges``
+        elides the (B, K_s, d) edge output of segments whose symmetric
+        contribution the caller discards.
+      * ``scatter_fused=True``: the symmetrisation itself moves into the
+        op -- per-edge forces are accumulated in-kernel into per-segment
+        (N, d) displacement-field partials (+edge at the query row,
+        -edge at the neighbour row where ``scatter_back[s]``), so no
+        per-edge tensor round-trips through HBM at all.  Returns
+        (scats, wsums); ``emit_edges`` must be left None.
     """
     segments = tuple((str(m), int(s)) for m, s in segments)
-    if emit_edges is not None:
-        emit_edges = tuple(bool(e) for e in emit_edges)
     if backend == "auto":
         backend = _default_backend()
+    if scatter_fused:
+        assert emit_edges is None, "emit_edges is an edge-mode option"
+        if scatter_back is not None:
+            scatter_back = tuple(bool(b) for b in scatter_back)
+        if backend == "pallas" and not _scatter_slabs_fit_vmem(x, segments):
+            backend = "xla"
+        if backend == "pallas":
+            return ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha,
+                                            segments=segments,
+                                            scatter_back=scatter_back)
+        if backend == "interpret":
+            return ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha,
+                                            segments=segments,
+                                            scatter_back=scatter_back,
+                                            interpret=True)
+        if backend == "xla":
+            return ne_forces_scatter_ref(x, qid, nbr_idx, coef, alpha,
+                                         segments=segments,
+                                         scatter_back=scatter_back)
+        raise ValueError(f"unknown backend {backend!r}")
+    assert scatter_back is None, "scatter_back is a scatter_fused option"
+    if emit_edges is not None:
+        emit_edges = tuple(bool(e) for e in emit_edges)
     if backend == "pallas":
         return ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha,
                                        segments=segments,

@@ -20,6 +20,7 @@ neighbour side outside the kernel (scatter-free symmetrisation, DESIGN.md #3).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -77,3 +78,44 @@ def ne_forces_gather_ref(x, qid, nbr_idx, coef, alpha, *, segments: tuple,
         wsums.append(wsum)
         k0 += size
     return tuple(aggs), tuple(edges), tuple(wsums)
+
+
+def ne_forces_scatter_ref(x, qid, nbr_idx, coef, alpha, *, segments: tuple,
+                          scatter_back: tuple = None):
+    """Scatter-fused oracle on ``jax.ops.segment_sum``.
+
+    Instead of returning per-edge forces for the caller to scatter, each
+    segment's edges are accumulated into an (N, d) displacement-field
+    partial:
+
+        scat_s[qid[b]]        += sum_k edge_s[b, k]    (query-side agg)
+        scat_s[nbr_idx[b, k]] -= edge_s[b, k]          (symmetric reaction,
+                                                        iff scatter_back[s])
+
+    so the scatter-free symmetrisation of DESIGN.md #3 happens inside the
+    op and the (B, K_s, d) edge tensor is a transient XLA value, never
+    part of the contract.  Per-segment scale factors stay with the caller
+    (the repulsion scale needs this launch's wsums via the Z estimator).
+    Returns (scats, wsums): tuples of (N, d) fields and (B,) w sums.
+    """
+    if scatter_back is None:
+        scatter_back = (True,) * len(segments)
+    n, d = x.shape
+    qc = jnp.clip(qid, 0, n - 1)
+    y = x[qc]
+    scats, wsums = [], []
+    k0 = 0
+    for (mode, size), back in zip(segments, scatter_back):
+        sl = slice(k0, k0 + size)
+        tgt = jnp.clip(nbr_idx[:, sl], 0, n - 1)
+        agg, edge, wsum = ne_forces_ref(y, x[tgt], coef[:, sl], alpha,
+                                        mode=mode)
+        scat = jax.ops.segment_sum(agg, qc, num_segments=n)
+        if back:
+            scat = scat + jax.ops.segment_sum(-edge.reshape(-1, d),
+                                              tgt.reshape(-1),
+                                              num_segments=n)
+        scats.append(scat)
+        wsums.append(wsum)
+        k0 += size
+    return tuple(scats), tuple(wsums)

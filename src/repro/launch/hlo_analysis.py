@@ -193,6 +193,25 @@ def _wire_bytes(op: str, out_b: float, g: int) -> float:
     return out_b                     # collective-permute
 
 
+def module_array_shapes(text: str):
+    """Every array shape appearing in the module, as {(dtype, dims)}.
+
+    Covers parameter declarations and instruction result types of all
+    computations (including fusion bodies and loop bodies), so a buffer
+    that exists anywhere in the compiled module shows up.  Used by tests
+    that assert a data-path rewrite really removed a materialisation
+    (e.g. the scatter-fused force epilogue: no (n, K, d) per-edge force
+    tensor may appear in the step's HLO).
+    """
+    shapes = set()
+    for comp in parse_module(text).values():
+        for type_str in comp.shapes.values():
+            for dtype, dims in _SHAPE.findall(type_str):
+                shapes.add((dtype,
+                            tuple(int(d) for d in dims.split(",") if d)))
+    return shapes
+
+
 @dataclasses.dataclass
 class ModuleCost:
     dot_flops: float

@@ -118,6 +118,38 @@ def test_nnd_converges_on_overlapping_blobs():
     assert q > 0.95, q
 
 
+def test_nnd_gather_fused_bit_equivalent_to_pregather():
+    """The nnd.py port onto the index-taking pairwise_sqdist_gather kernel
+    is a pure data-path change: init + steps must match the legacy
+    pre-gather wiring bit-for-bit on the XLA backend."""
+    import dataclasses
+
+    import jax
+    from repro.core.nnd import nnd_init, nnd_step
+
+    X, _ = blobs(n=150, dim=12, n_centers=4, seed=9)
+    Xj = jnp.asarray(X)
+    cfg_g = NNDConfig(k=8, c_fwd=4, c_rev=2, backend="xla",
+                      gather_fused=True)
+    cfg_l = dataclasses.replace(cfg_g, gather_fused=False)
+    rng = jax.random.PRNGKey(0)
+
+    def run(cfg):
+        idx, d = nnd_init(rng, Xj, cfg)
+        fracs = []
+        for it in range(5):
+            idx, d, frac = nnd_step(jax.random.fold_in(rng, it), Xj, idx, d,
+                                    cfg)
+            fracs.append(float(frac))
+        return np.asarray(idx), np.asarray(d), fracs
+
+    idx_g, d_g, f_g = run(cfg_g)
+    idx_l, d_l, f_l = run(cfg_l)
+    np.testing.assert_array_equal(idx_g, idx_l)
+    np.testing.assert_array_equal(d_g, d_l)
+    assert f_g == f_l
+
+
 def test_nnd_struggles_on_disjoint_blobs():
     """Paper Fig. 7: the greedy local join stalls on isolated clusters."""
     X, _ = disjoint_blobs(n=600, dim=16, n_centers=100, seed=0)

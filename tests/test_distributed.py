@@ -53,6 +53,52 @@ def test_funcsne_distributed_step_improves_knn():
     assert "OK" in out
 
 
+def test_funcsne_distributed_scatter_fused_matches_legacy_epilogue():
+    """The force psum consuming scatter-fused kernel partials must produce
+    the same displacement field as the legacy edge-scatter epilogue on a
+    (data, model) mesh.  Both paths quantise the psum to bf16 (Perf
+    H10a), so a few steps with a loose tolerance is the honest bound --
+    per-step fp32 parity is pinned single-device in test_scatter_fused.py.
+    """
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro import compat
+        from repro.data.synthetic import blobs
+        from repro.core import funcsne
+
+        X, _ = blobs(n=512, dim=16, n_centers=5, center_std=6.0)
+        Xj = jnp.asarray(X)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        cfg_s = funcsne.FuncSNEConfig(n_points=512, dim_hd=16,
+                                      backend="xla", scatter_fused=True)
+        cfg_l = dataclasses.replace(cfg_s, scatter_fused=False)
+        st0 = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg_s)
+        hp = funcsne.default_hparams(512)
+        Xs = jax.device_put(Xj, NamedSharding(mesh, P(None, "model")))
+
+        def run(cfg):
+            step, _ = funcsne.make_distributed_step(cfg, mesh)
+            # the step donates its state: hand each run its own copy
+            st = jax.device_put(jax.tree.map(lambda a: jnp.array(a,
+                                                                 copy=True),
+                                             st0),
+                                NamedSharding(mesh, P()))
+            for _ in range(8):
+                st = step(st, Xs, hp)
+            return st
+
+        st_s, st_l = run(cfg_s), run(cfg_l)
+        assert bool(jnp.isfinite(st_s.Y).all())
+        np.testing.assert_allclose(np.asarray(st_s.Y), np.asarray(st_l.Y),
+                                   rtol=5e-2, atol=5e-3)
+        np.testing.assert_allclose(float(st_s.zhat), float(st_l.zhat),
+                                   rtol=2e-2)
+        print("OK scatter-fused == legacy on mesh")
+    """)
+    assert "OK" in out
+
+
 def test_lm_train_step_compiles_and_runs_on_mesh():
     out = _run("""
         import dataclasses, jax, jax.numpy as jnp

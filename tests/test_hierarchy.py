@@ -1,0 +1,40 @@
+"""Hierarchy extraction units: subsampled DBSCAN-eps selection."""
+import numpy as np
+
+from repro.core.hierarchy import select_eps
+
+
+def _snapshot(n=900, seed=0):
+    """Blob-ish 2-D snapshot resembling a mid-optimisation embedding."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(6, 2)) * 8.0
+    lab = rng.integers(0, 6, n)
+    return (centers[lab] + rng.normal(size=(n, 2))).astype(np.float32)
+
+
+def test_select_eps_subsample_close_to_full_matrix():
+    """Regression for the O(N^2) fix: the seeded-subsample quantile must
+    stay within tolerance of the full-pairwise-matrix value."""
+    Y = _snapshot()
+    for q in (0.02, 0.05):
+        eps_full = select_eps(Y, q, max_rows=Y.shape[0])
+        eps_sub = select_eps(Y, q, max_rows=256)
+        assert abs(eps_sub - eps_full) / eps_full < 0.2, (
+            q, eps_sub, eps_full)
+
+
+def test_select_eps_seeded_and_capped():
+    Y = _snapshot(seed=3)
+    a = select_eps(Y, 0.02, max_rows=128, seed=7)
+    b = select_eps(Y, 0.02, max_rows=128, seed=7)
+    assert a == b                        # deterministic for a fixed seed
+    c = select_eps(Y, 0.02, max_rows=128, seed=8)
+    assert a != c                        # and actually subsampled
+    assert select_eps(Y, 0.02, max_rows=10 ** 6) > 0   # cap at n rows
+
+
+def test_select_eps_collapsed_snapshot():
+    """A fully collapsed snapshot has no distance scale: return 0 rather
+    than crash on an empty quantile."""
+    Y = np.zeros((64, 2), np.float32)
+    assert select_eps(Y, 0.02, max_rows=32) == 0.0
