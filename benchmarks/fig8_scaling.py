@@ -1,9 +1,27 @@
 """Paper Fig. 8: wall time vs dataset size at fixed dim (32).
 
 Verifies the O(N) per-iteration claim: time/iter should grow ~linearly in
-N (slope ratio reported).  Also compares the always-refine-HD variant
-(paper's dashed line) against the default probabilistic refresh.
+N.  ``fig8_linearity`` is the measured slope ratio over the ideal linear
+ratio -- 1.0 means exactly linear, >1 superlinear -- computed from the
+n-sweep endpoints.  Also compares the always-refine-HD variant (paper's
+dashed line) against the default probabilistic refresh.
+
+The chunked-driver rows time the scan-chunked step (§Perf H15) at the
+sweep's largest size: ``fig8_chunked_T1`` dispatches every iteration (the
+per-dispatch baseline the host loop used to pay), ``fig8_chunked_T50``
+runs 50 iterations per dispatch; the ratio row is the amortisation win.
+The two are timed *paired* (interleaved, best-of-trials) so shared-host
+load hits both equally.
+
+Run directly (``python -m benchmarks.fig8_scaling --smoke --json f.json``)
+this module is its own harness: unlike ``benchmarks.run`` it does NOT
+swallow exceptions, so CI uses ``--smoke`` as a driver-level regression
+gate that actually fails the workflow.
 """
+import argparse
+import json
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 
@@ -12,7 +30,49 @@ from repro.core import funcsne
 from repro.data.synthetic import blobs
 
 
-def run(sizes=(512, 1024, 2048, 4096), iters=120):
+def _copy(st):
+    return jax.tree.map(lambda a: jnp.array(a, copy=True), st)
+
+
+def _chunked_rows(n, Xj, iters, chunk_sizes, trials=5):
+    """Per-iteration us for each chunk size, paired/interleaved."""
+    cfg = funcsne.FuncSNEConfig(n_points=n, dim_hd=Xj.shape[1])
+    hp = funcsne.default_hparams(n)
+    st0 = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+
+    runners = {}
+    for T in chunk_sizes:
+        chunk = funcsne.make_chunked_step(cfg, T)
+        n_chunks = max(1, iters // T)
+
+        def run(chunk=chunk, n_chunks=n_chunks, T=T):
+            st = _copy(st0)               # the program donates its input
+            for _ in range(n_chunks):
+                st, _, _ = chunk(st, Xj, hp)
+            jax.block_until_ready(st.Y)
+            return n_chunks * T
+
+        run()                             # compile outside the clock
+        runners[T] = run
+
+    best = {T: float("inf") for T in chunk_sizes}
+    for t in range(trials):
+        order = chunk_sizes if t % 2 == 0 else tuple(reversed(chunk_sizes))
+        for T in order:
+            steps, dt = timed(runners[T])
+            best[T] = min(best[T], dt * 1e6 / steps)
+    rows = [row(f"fig8_chunked_T{T}_n{n}", best[T],
+                f"{max(1, iters // T)}x{T}-step dispatches")
+            for T in chunk_sizes]
+    if len(chunk_sizes) >= 2:
+        t1, tb = chunk_sizes[0], chunk_sizes[-1]
+        ratio = best[t1] / max(best[tb], 1e-9)
+        rows.append(row(f"fig8_chunked_amortisation_n{n}", ratio,
+                        f"T{t1}_us/T{tb}_us={ratio:.3f} (ratio, not us)"))
+    return rows
+
+
+def run(sizes=(512, 1024, 2048, 4096), iters=120, chunk_sizes=(1, 50)):
     rows = []
     per_iter = {}
     for n in sizes:
@@ -42,7 +102,38 @@ def run(sizes=(512, 1024, 2048, 4096), iters=120):
     slope = (per_iter[("default", sizes[-1])]
              / max(per_iter[("default", sizes[0])], 1e-9))
     ideal = sizes[-1] / sizes[0]
-    rows.append(row("fig8_linearity", 0.0,
+    rows.append(row("fig8_linearity", slope / ideal,
                     f"t({sizes[-1]})/t({sizes[0]})={slope:.2f};"
-                    f"ideal={ideal:.1f}"))
+                    f"ideal={ideal:.1f};score=slope/ideal (1.0=linear)"))
+
+    # chunked driver at the largest size: per-dispatch vs 50-per-dispatch
+    n = sizes[-1]
+    X, _ = blobs(n=n, dim=32, n_centers=8, center_std=6.0, seed=0)
+    rows += _chunked_rows(n, jnp.asarray(X), iters, tuple(chunk_sizes))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep: CI driver-level regression gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write {name: us_per_call} JSON to PATH")
+    args = ap.parse_args()
+    kwargs = dict(sizes=(256, 512), iters=16, chunk_sizes=(1, 8)) \
+        if args.smoke else {}
+    results = {}
+    print("name,us_per_call,derived")
+    for r in run(**kwargs):
+        print(r, flush=True)
+        name, us = str(r).split(",")[:2]
+        results[name] = float(us)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {len(results)} results to {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

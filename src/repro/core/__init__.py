@@ -12,7 +12,7 @@ Public surface:
 """
 
 from repro.core.funcsne import (  # noqa: F401
-    AxisCtx, FuncSNEConfig, FuncSNEState, HParams, add_points,
+    AxisCtx, ChunkMetrics, FuncSNEConfig, FuncSNEState, HParams, add_points,
     default_hparams, default_schedule, fit, funcsne_step, init_state,
-    make_distributed_step, make_step, pca_directions, remove_points,
-    rescale_embedding)
+    make_chunked_step, make_distributed_step, make_step, pca_directions,
+    remove_points, rescale_embedding)

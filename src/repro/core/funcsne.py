@@ -17,6 +17,35 @@ attraction/repulsion ratio, lr, exaggeration) are *traced scalars*
 (``HParams``) so changing them never recompiles -- the headless equivalent
 of the paper's instant-GUI-feedback property.
 
+Driver surface (one traced step, three dispatch granularities):
+
+  ``make_step(cfg)``
+      jitted single-device ``step(st, X, hp) -> st``; one dispatch per
+      iteration (interactive GUIs that must see every frame).
+  ``make_chunked_step(cfg, T, schedule=, n_iter=, snapshot_every=)``
+      jitted ``chunk(st, X, hp) -> (st, snaps, ChunkMetrics)``: T
+      iterations inside ONE ``lax.scan`` device program (§Perf H15) --
+      the hyperparameter schedule runs on device from the carried
+      ``st.step``, snapshots land in a device-side ``(n_snap, n, d)``
+      ring, and per-step scalars are EMA'd into one ChunkMetrics sync
+      per chunk.  ``fit`` and ``launch/embed.py`` run on this.
+  ``make_distributed_step(cfg, mesh, ..., chunk=None)``
+      the same two contracts under ``shard_map``: ``chunk=None`` keeps
+      the classic one-step program, ``chunk=T`` the scan-chunked one.
+
+Config flag matrix (orthogonal, all combinations tested):
+  ``gather_fused``   True: kernels take indices and DMA rows in-kernel
+                     (§H12/H13); False: legacy pre-gather wiring
+                     (bit-equivalence anchor).
+  ``scatter_fused``  True: symmetrisation binned in-kernel into (N, d)
+                     partials (§H14; requires gather_fused); False:
+                     edge-emitting epilogue + XLA scatters.
+  ``backend``        'auto' (pallas on TPU else xla) | 'pallas' |
+                     'interpret' | 'xla'.  The scatter kernel's VMEM
+                     plan (ne_forces/ops.py: ~10MB budget, N-chunked
+                     bins, XLA ref fallback only for degenerate plans)
+                     applies on the pallas/interpret paths.
+
 Distribution (DESIGN.md Sec. 3/5): inside ``shard_map`` the embedding state
 is replicated; each device owns a contiguous row slice per phase
 (KNN phases: the ``points`` axes; force phase: points x feat axes) and the
@@ -53,6 +82,15 @@ are psum'd -- tensor parallelism for the NE.  Passing ``ctx=AxisCtx()``
         scatters that consumed them vanish -- the step's last per-edge
         HBM round-trip.  ``cfg.scatter_fused=False`` restores the
         edge-emitting epilogue (kept for equivalence tests / A-B benches).
+  H15   scan-chunked driver: T iterations per dispatch via ``lax.scan``
+        with a donated state carry -- host->device dispatch cost, the
+        per-step hyperparameter upload (schedule evaluated from the
+        carried ``st.step``), per-step ``device_get`` snapshots (device
+        ring buffer) and per-step metric syncs (EMA'd ChunkMetrics) all
+        amortise to 1/T.  Chunk boundaries are bit-exactly neutral
+        (chunk(a) then chunk(b) == chunk(a+b)); a handful of
+        ``optimization_barrier``\\ s pin scalar EMA/schedule rounding so
+        the traced chunk tracks the eager host loop it replaced.
 """
 from __future__ import annotations
 
@@ -442,13 +480,22 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
 
     # ---- Z estimator:  Z ~= sum_i [ sum_{j in LD_i} w_ij + scale * mean_neg ]
     # (x2 undoes the 0.5 symmetrisation coefficient baked into coef_r)
-    z_local = 2.0 * jnp.sum(wsum_r) + scale_neg * jnp.sum(wsum_n)
+    # The barriers pin the mul-then-add rounding: without them the CPU
+    # backend FMA-contracts these scalar a*x+b*y chains *differently*
+    # inside a while/scan body than in straight-line code, so the chunked
+    # driver would drift 1 ulp per step from T sequential dispatches and
+    # break the scan==sequential bit-parity contract.
+    wsum_r_m, wsum_n_m = jax.lax.optimization_barrier(
+        (wsum_r, wsum_n if have_neg else jnp.float32(0.0)))
+    z_local = sum(jax.lax.optimization_barrier(
+        (2.0 * jnp.sum(wsum_r_m), scale_neg * jnp.sum(wsum_n_m))))
     z_est = (jax.lax.psum(z_local, ctx.all_rows)
              if ctx.all_rows is not None else z_local)
     z_est = jnp.maximum(z_est, 1e-8)
     zhat = jnp.where(st.step == 0, z_est,
-                     cfg.z_ema_decay * st.zhat
-                     + (1.0 - cfg.z_ema_decay) * z_est)
+                     sum(jax.lax.optimization_barrier(
+                         (cfg.z_ema_decay * st.zhat,
+                          (1.0 - cfg.z_ema_decay) * z_est))))
 
     # ---- assemble the displacement field (one (N, d) buffer + one psum)
     attr_s = hp.attraction * hp.exaggeration
@@ -594,19 +641,131 @@ def make_step(cfg: FuncSNEConfig):
     return jax.jit(functools.partial(funcsne_step, cfg), donate_argnums=(0,))
 
 
+# --------------------------------------------------------------------------
+# Scan-chunked on-device driver (§Perf H15)
+
+
+class ChunkMetrics(NamedTuple):
+    """Per-chunk driver telemetry -- ONE host sync per chunk, not per step.
+
+    All fields are device scalars; a GUI/driver reads them once per chunk
+    (the headless equivalent of the paper's per-frame status line).
+    """
+    step: Any           # () i32  global iteration count after the chunk
+    n_snapshots: Any    # () i32  ring slots written this chunk
+    disp_ema: Any       # () f32  EMA over the chunk of mean |vel| (active)
+    zhat: Any           # () f32  Z estimator at chunk end
+    ema_new_frac: Any   # () f32  HD-refinement EMA at chunk end
+
+
+def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
+              snapshot_every: int = 0, ctx: AxisCtx = AxisCtx(),
+              metrics_decay: float = 0.9):
+    """Traced chunk body: ``(st, X, hp) -> (st, snaps, ChunkMetrics)``.
+
+    Runs ``T`` iterations of :func:`funcsne_step` inside ONE
+    ``jax.lax.scan`` so a dispatch's fixed host->device cost is amortised
+    over the whole chunk.  Everything the per-step host loop used to do on
+    the host moves into the carry:
+
+      * hyperparameter schedule: evaluated from the carried ``st.step``
+        (``schedule(it, n_iter, hp)`` with traced ``it``) -- no per-step
+        scalar uploads; ``schedule=None`` applies ``hp`` unchanged, which
+        makes the chunk bit-identical to ``T`` sequential ``make_step``
+        calls;
+      * snapshots: a device-side ``(n_snap, n, d)`` ring-buffer carry slot
+        captures ``Y`` whenever ``st.step % snapshot_every == 0`` (the
+        same instants the host loop device_get'd); the host drains
+        ``snaps[:metrics.n_snapshots]`` once per chunk;
+      * metrics: per-step scalars are EMA'd into :class:`ChunkMetrics` so
+        the driver/GUI syncs one tuple per chunk.
+    """
+    assert T >= 1, T
+    if schedule is not None and n_iter is None:
+        raise ValueError("schedule requires a static n_iter horizon")
+    n, d = cfg.n_points, cfg.dim_ld
+    # worst-case dues per chunk at any chunk<->snapshot alignment
+    n_snap = (T // snapshot_every + 1) if snapshot_every else 0
+
+    def chunk(st: FuncSNEState, X, hp: HParams):
+        snaps0 = jnp.zeros((n_snap, n, d), jnp.float32)
+
+        def body(carry, _):
+            st, snaps, k, disp = carry
+            hp_t = schedule(st.step, n_iter, hp) if schedule else hp
+            st = funcsne_step(cfg, st, X, hp_t, ctx)
+            n_act = jnp.maximum(jnp.sum(st.active.astype(jnp.float32)), 1.0)
+            act_disp = jnp.sum(jnp.abs(st.vel)
+                               * st.active[:, None].astype(jnp.float32)) \
+                / (n_act * d)
+            disp = metrics_decay * disp + (1.0 - metrics_decay) * act_disp
+            if n_snap:
+                due = (st.step % snapshot_every) == 0
+                snaps = jax.lax.cond(
+                    due,
+                    lambda s: jax.lax.dynamic_update_index_in_dim(
+                        s, st.Y, jnp.clip(k, 0, n_snap - 1), 0),
+                    lambda s: s, snaps)
+                k = k + due.astype(jnp.int32)
+            return (st, snaps, k, disp), None
+
+        (st, snaps, k, disp), _ = jax.lax.scan(
+            body, (st, snaps0, jnp.int32(0), jnp.float32(0.0)), None,
+            length=T)
+        metrics = ChunkMetrics(step=st.step, n_snapshots=k, disp_ema=disp,
+                               zhat=st.zhat, ema_new_frac=st.ema_new_frac)
+        return st, snaps, metrics
+
+    return chunk
+
+
+def make_chunked_step(cfg: FuncSNEConfig, T: int, *, schedule=None,
+                      n_iter=None, snapshot_every: int = 0):
+    """Jitted ``T``-iteration device program; state is donated.
+
+    Returns ``chunk(st, X, hp) -> (st, snaps, ChunkMetrics)``.  One
+    dispatch runs the whole chunk: schedule, snapshot ring and metrics all
+    live on device (see :func:`_chunk_fn`), so the per-iteration host cost
+    is the per-chunk cost / ``T``.
+    """
+    return jax.jit(_chunk_fn(cfg, T, schedule=schedule, n_iter=n_iter,
+                             snapshot_every=snapshot_every),
+                   donate_argnums=(0,))
+
+
 def make_distributed_step(cfg: FuncSNEConfig, mesh, *,
-                          points_axes=("data",), feat_axis="model"):
-    """shard_map'd step for a production mesh (see module docstring)."""
+                          points_axes=("data",), feat_axis="model",
+                          chunk: int = None, schedule=None, n_iter=None,
+                          snapshot_every: int = 0):
+    """shard_map'd step for a production mesh (see module docstring).
+
+    ``chunk=None`` keeps the classic one-step contract
+    ``step(st, X, hp) -> st``.  ``chunk=T`` returns the scan-chunked
+    driver under the same mesh: ``step(st, X, hp) -> (st, snaps,
+    ChunkMetrics)`` with the per-chunk collectives identical to ``T``
+    sequential distributed steps -- the chunk body is the same traced
+    ``funcsne_step``, so the psum/all-gather schedule per iteration is
+    unchanged and only the dispatch + host-sync cost is amortised.
+    """
     ctx = AxisCtx(points=tuple(points_axes), feat=feat_axis)
-
-    def step(st, X, hp):
-        return funcsne_step(cfg, st, X, hp, ctx)
-
     state_specs = FuncSNEState(*([P()] * len(FuncSNEState._fields)))
-    fn = compat.shard_map(step, mesh=mesh,
-                          in_specs=(state_specs, P(None, feat_axis),
-                                    HParams(*([P()] * len(HParams._fields)))),
-                          out_specs=state_specs, check_vma=False)
+    in_specs = (state_specs, P(None, feat_axis),
+                HParams(*([P()] * len(HParams._fields))))
+
+    if chunk is None:
+        def step(st, X, hp):
+            return funcsne_step(cfg, st, X, hp, ctx)
+
+        fn = compat.shard_map(step, mesh=mesh, in_specs=in_specs,
+                              out_specs=state_specs, check_vma=False)
+        return jax.jit(fn, donate_argnums=(0,)), ctx
+
+    body = _chunk_fn(cfg, chunk, schedule=schedule, n_iter=n_iter,
+                     snapshot_every=snapshot_every, ctx=ctx)
+    out_specs = (state_specs, P(),
+                 ChunkMetrics(*([P()] * len(ChunkMetrics._fields))))
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
     return jax.jit(fn, donate_argnums=(0,)), ctx
 
 
@@ -640,8 +799,22 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         hparams: HParams = None,
         schedule: Callable[[int, int, HParams], HParams] = None,
         init: str = "pca", snapshot_every: int = 0,
-        callback: Callable[[int, FuncSNEState], None] = None):
-    """End-to-end driver. Returns (state, snapshots)."""
+        callback: Callable[[int, FuncSNEState], None] = None,
+        chunk_size: int = None):
+    """End-to-end driver on the scan-chunked step. Returns (state, snapshots).
+
+    ``chunk_size`` iterations run per device dispatch (§Perf H15); the host
+    syncs once per chunk to drain the snapshot ring.  Default: 50, or 1
+    when a per-iteration ``callback`` is supplied (the callback contract
+    needs the state after every step).  Schedule, snapshots and metrics
+    are computed on device.  Results are bit-invariant to ``chunk_size``;
+    vs the per-step host loop this replaces, parity is to fp32 codegen
+    tolerance (contract pinned in tests/test_chunked_driver.py).
+
+    A ``schedule`` is evaluated with a *traced* ``it`` inside the chunk;
+    one that needs a Python ``int`` (host control flow on ``it``) is
+    detected up front and falls back to the per-step host loop.
+    """
     X = jnp.asarray(X, jnp.float32)
     if rng is None:
         rng = jax.random.PRNGKey(0)
@@ -651,12 +824,44 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         hparams = default_hparams(cfg.n_points)
     if schedule is None:
         schedule = default_schedule
+    if chunk_size is None:
+        chunk_size = 1 if callback is not None else min(50, max(1, n_iter))
+    try:        # host-only schedules (Python control flow on it) -> host loop
+        jax.eval_shape(lambda it: schedule(it, n_iter, hparams),
+                       jax.ShapeDtypeStruct((), jnp.int32))
+    except jax.errors.ConcretizationTypeError:
+        return _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
+                              snapshot_every, callback)
+    st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
+    snapshots = []
+    chunks = {}         # T -> compiled program (final ragged chunk reuses it)
+    it = 0
+    while it < n_iter:
+        T = min(chunk_size, n_iter - it)
+        if T not in chunks:
+            chunks[T] = make_chunked_step(cfg, T, schedule=schedule,
+                                          n_iter=n_iter,
+                                          snapshot_every=snapshot_every)
+        st, snaps, metrics = chunks[T](st, X, hparams)
+        if snapshot_every:
+            taken = int(metrics.n_snapshots)
+            if taken:
+                snapshots.extend(list(jax.device_get(snaps[:taken])))
+        if callback is not None:
+            callback(it + T - 1, st)
+        it += T
+    return st, snapshots
+
+
+def _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
+                   snapshot_every, callback):
+    """Pre-H15 per-step host loop: kept for schedules that must see a
+    Python ``it`` (``fit`` detects those and routes here)."""
     st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
     step = make_step(cfg)
     snapshots = []
     for it in range(n_iter):
-        hp = schedule(it, n_iter, hparams)
-        st = step(st, X, hp)
+        st = step(st, X, schedule(it, n_iter, hparams))
         if snapshot_every and (it + 1) % snapshot_every == 0:
             snapshots.append(jax.device_get(st.Y))
         if callback is not None:
@@ -664,17 +869,30 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
     return st, snapshots
 
 
-def default_schedule(it: int, n_iter: int, hp: HParams) -> HParams:
+def default_schedule(it, n_iter: int, hp: HParams) -> HParams:
     """Early exaggeration, then a linear lr decay (UMAP-style).
 
     The paper runs a *continual* optimisation where the user counteracts the
     ever-expanding-embedding regime interactively (attraction ratio /
     'implosion' button).  For a batch ``fit`` the equivalent is annealing the
     learning rate so negative-sampling noise stops diffusing the layout.
+
+    ``it`` may be a *traced* i32 scalar (``n_iter`` stays static): the
+    chunked driver evaluates the schedule on-device from the carried
+    ``st.step``, so no per-iteration host scalar upload exists.  All
+    arithmetic is pinned to i32/f32 jnp ops so a host call with a Python
+    ``it`` produces bit-identical hyperparameters to the traced evaluation.
     """
     ee_until = max(1, n_iter // 4)
+    it = jnp.asarray(it, jnp.int32)
     ex = jnp.where(it < ee_until, 12.0, 1.0) * hp.exaggeration
     mom = jnp.where(it < ee_until, 0.5, hp.momentum)
-    frac = max(0.0, (it - ee_until) / max(1, n_iter - ee_until))
-    lr = hp.lr * (1.0 - 0.9 * frac)
+    # the barriers pin traced == eager rounding: without them jit rewrites
+    # the constant division into a reciprocal multiply and FMA-contracts
+    # the 1 - 0.9*frac chain, so the chunked driver's on-device schedule
+    # would drift 1 ulp from the host loop's eager evaluation
+    denom = jax.lax.optimization_barrier(
+        jnp.float32(max(1, n_iter - ee_until)))
+    frac = jnp.maximum(jnp.float32(0.0), (it - ee_until) / denom)
+    lr = hp.lr * (1.0 - jax.lax.optimization_barrier(0.9 * frac))
     return hp._replace(exaggeration=ex, momentum=mom, lr=lr)

@@ -23,6 +23,7 @@ is the term that matters.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -122,16 +123,19 @@ def _round_up(x: int, mult: int) -> int:
 # power is compiled straight-line -- no per-edge mode mask is evaluated.
 #
 # Index slabs are staged into SMEM by the pipeline (O(block_b * K), never
-# O(B)); row DMAs are issued back-to-back on one semaphore and drained in
-# issue order (distinct destination slots -> no WAR hazard).
+# O(B)).  The b loop is double-buffered: rows are processed in ``sub_b``
+# sub-blocks through 2-slot VMEM staging with sub-block p+1's row DMAs
+# issued before sub-block p is computed, so the row-gather latency hides
+# behind the tail-power math instead of preceding it.
 
 
 def _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr, sem):
     """Stage x[qid[r]] -> q_scr[r] and x[nbr[r, k]] -> n_scr[r, k] row DMAs.
 
     Issued back-to-back on one semaphore and drained in issue order
-    (distinct destination slots -> no WAR hazard).  Shared by the
-    edge-emitting and scatter-fused gather kernels.
+    (distinct destination slots -> no WAR hazard).  Used by the
+    scatter-fused kernel, whose whole block stays resident across its
+    N-chunk sweep.
     """
     block_b, K, _ = n_scr.shape
 
@@ -159,44 +163,85 @@ def _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr, sem):
 
 
 def _ne_forces_gather_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
-                             *refs, segments: tuple, emit_edges: tuple):
+                             *refs, segments: tuple, emit_edges: tuple,
+                             sub_b: int):
     """qid (bb,) SMEM; nbr (bb, K) SMEM; alpha (1,1) SMEM; coef (bb, K) VMEM;
     x (N, d) ANY -> per segment s: agg (bb, d), edge (bb, K_s, d) for
     segments with emit_edges[s], wsum (bb, 1); then scratch
-    (q_scr, n_scr, sem)."""
+    (q_scr (2, sub_b, d), n_scr (2, sub_b, K, d), sem (2,))."""
     S = len(segments)
     E = sum(emit_edges)
     agg_refs = refs[:S]
     edge_refs = refs[S:S + E]
     wsum_refs = refs[S + E:2 * S + E]
     q_scr, n_scr, sem = refs[2 * S + E:]
-
-    _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr, sem)
-
+    block_b, K = coef_ref.shape
+    n_sub = block_b // sub_b
     alpha = alpha_ref[0, 0]
-    y = q_scr[...].astype(jnp.float32)              # (bb, d)
-    nbr = n_scr[...].astype(jnp.float32)            # (bb, K, d)
-    coef = coef_ref[...].astype(jnp.float32)        # (bb, K)
 
-    k0, e_i = 0, 0
-    for s, (mode, size) in enumerate(segments):
-        sl = slice(k0, k0 + size)
-        delta = nbr[:, sl] - y[:, None, :]          # (bb, size, d)
-        edge, wsum = _edge_wsum(delta, coef[:, sl], alpha, mode)
-        if emit_edges[s]:
-            edge_refs[e_i][...] = edge
-            e_i += 1
-        agg_refs[s][...] = jnp.sum(edge, axis=1)
-        wsum_refs[s][...] = wsum[:, None]
-        k0 += size
+    def sub_copies(p, op):
+        """Start/wait the 2-slot staged row DMAs of sub-block ``p``."""
+        slot = p % 2
+
+        def row(lr, _):
+            r = p * sub_b + lr
+            op(pltpu.make_async_copy(x_ref.at[qid_ref[r]],
+                                     q_scr.at[slot, lr], sem.at[slot]))
+            jax.lax.fori_loop(
+                0, K, lambda k, x: (op(pltpu.make_async_copy(
+                    x_ref.at[nbr_ref[r, k]], n_scr.at[slot, lr, k],
+                    sem.at[slot])), x)[1], None)
+            return _
+
+        jax.lax.fori_loop(0, sub_b, row, None)
+
+    sub_copies(0, lambda cp: cp.start())
+
+    def body(p, _):
+        slot = p % 2
+
+        @pl.when(p + 1 < n_sub)
+        def _prefetch():                     # overlap: copy p+1, compute p
+            sub_copies(p + 1, lambda cp: cp.start())
+
+        sub_copies(p, lambda cp: cp.wait())
+
+        base = p * sub_b
+        y = q_scr[slot].astype(jnp.float32)         # (sub_b, d)
+        nbr = n_scr[slot].astype(jnp.float32)       # (sub_b, K, d)
+        coef = coef_ref[pl.ds(base, sub_b)].astype(jnp.float32)
+
+        k0, e_i = 0, 0
+        for s, (mode, size) in enumerate(segments):
+            sl = slice(k0, k0 + size)
+            delta = nbr[:, sl] - y[:, None, :]      # (sub_b, size, d)
+            edge, wsum = _edge_wsum(delta, coef[:, sl], alpha, mode)
+            if emit_edges[s]:
+                edge_refs[e_i][pl.ds(base, sub_b)] = edge
+                e_i += 1
+            agg_refs[s][pl.ds(base, sub_b)] = jnp.sum(edge, axis=1)
+            wsum_refs[s][pl.ds(base, sub_b)] = wsum[:, None]
+            k0 += size
+        return _
+
+    jax.lax.fori_loop(0, n_sub, body, None)
+
+
+def _pick_sub_b(block_b: int) -> int:
+    """Double-buffer sub-block: small blocks stay monolithic (nothing to
+    overlap), bigger ones pipeline in 8-row (one f32 sublane) sub-blocks."""
+    if block_b <= 16 or block_b % 8:
+        return block_b
+    return 8
 
 
 @functools.partial(
-    jax.jit, static_argnames=("segments", "emit_edges", "block_b",
+    jax.jit, static_argnames=("segments", "emit_edges", "block_b", "sub_b",
                               "interpret"))
 def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
                             segments: tuple, emit_edges: tuple = None,
-                            block_b: int = 128, interpret: bool = False):
+                            block_b: int = 128, sub_b: int = None,
+                            interpret: bool = False):
     """Index-taking segmented force kernel.
 
     Args:
@@ -212,6 +257,8 @@ def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
         segment skips its (B, K_s, d) edge output entirely -- no HBM
         write for edges the caller would discard (e.g. negative samples,
         whose symmetric contribution is never scattered).
+      sub_b: double-buffer sub-block size (must divide ``block_b``);
+        default: 8-row sub-blocks for blocks > 16 rows.
     Returns (one entry per segment -- no packed buffers, so consumers
     never pay a concat/re-slice round-trip):
       aggs: tuple of (B, d) per-point aggregate forces,
@@ -235,9 +282,15 @@ def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
     coef = coef.astype(jnp.float32)
 
     block_b = min(block_b, _round_up(B, 8))
-    while block_b > 8 and (K + 1) * block_b * d * x.dtype.itemsize \
-            > 8 * 2 ** 20:
+    if sub_b is None:
+        sub_b = _pick_sub_b(block_b)
+    assert block_b % sub_b == 0, (block_b, sub_b)
+    while block_b > 8 and 2 * (K + 1) * min(sub_b, block_b) * d \
+            * x.dtype.itemsize > 8 * 2 ** 20:
         block_b //= 2
+        # a halved block_b may no longer be a multiple of sub_b: every row
+        # of a block must land in some sub-block, so re-derive a divisor
+        sub_b = math.gcd(sub_b, block_b)
     Bp = _round_up(B, block_b)
     if Bp != B:
         qid = jnp.pad(qid, (0, Bp - B))
@@ -251,7 +304,7 @@ def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
     E = len(emitted_sizes)
     outs = pl.pallas_call(
         functools.partial(_ne_forces_gather_kernel, segments=segments,
-                          emit_edges=emit_edges),
+                          emit_edges=emit_edges, sub_b=sub_b),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b,), lambda i: (i,),
@@ -276,9 +329,9 @@ def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
             + [jax.ShapeDtypeStruct((Bp, 1), jnp.float32)] * S
         ),
         scratch_shapes=[
-            pltpu.VMEM((block_b, d), x.dtype),
-            pltpu.VMEM((block_b, K, d), x.dtype),
-            pltpu.SemaphoreType.DMA(()),
+            pltpu.VMEM((2, sub_b, d), x.dtype),
+            pltpu.VMEM((2, sub_b, K, d), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
     )(qid, nbr_idx, alpha_arr, coef, x)
@@ -309,26 +362,37 @@ def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
 # is computed from this very launch's wsums, so the kernel returns raw
 # per-segment fields and the caller combines them with traced scalars.
 #
-# VMEM note: the (N, d) partial must be resident during a block's sweep,
-# so this kernel targets visualisation-scale d (2..8 padded to the lane
-# tile); at d=2 the slab costs N x 512B per segment, i.e. ~8MB at N=16k.
-# ops.py gates the pallas dispatch on a slab budget and falls back to the
-# XLA segment-sum ref past it (N-chunked in-kernel binning is the
-# ROADMAP item that lifts the cap).
+# VMEM note: only the current *N-chunk* of each per-segment partial is
+# resident during a grid step -- a second grid axis sweeps the target
+# rows in ``chunk_n`` slabs of (1, chunk_n, d), so the resident footprint
+# is S * chunk_n * 512B at d<=128 regardless of N.  The staged query /
+# neighbour rows are DMA'd once per block (at chunk 0) and stay resident
+# across that block's chunk sweep; each chunk replays the (cheap,
+# vectorised) tail-power math and bins only the edges whose target falls
+# inside the chunk.  ops.py picks ``chunk_n`` so the slabs fit the VMEM
+# budget (see ``scatter_chunk_plan``), which is what lifts the old
+# whole-(N, d)-resident cap that forced large-N runs back to the XLA
+# segment-sum ref.
 
 
 def _ne_forces_scatter_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
-                              *refs, segments: tuple, scatter_back: tuple):
+                              *refs, segments: tuple, scatter_back: tuple,
+                              chunk_n: int):
     """qid (bb,) SMEM; nbr (bb, K) SMEM; alpha (1,1) SMEM; coef (bb, K) VMEM;
-    x (N, d) ANY -> per segment s: scat (1, N, d) grid-block partial,
-    wsum (bb, 1); then scratch (q_scr, n_scr, sem)."""
+    x (N, d) ANY -> per segment s: scat (1, chunk_n, d) grid-block x
+    N-chunk partial, wsum (bb, 1); then scratch (q_scr, n_scr, sem)."""
     S = len(segments)
     scat_refs = refs[:S]
     wsum_refs = refs[S:2 * S]
     q_scr, n_scr, sem = refs[2 * S:]
     block_b, K, _ = n_scr.shape
+    c = pl.program_id(1)
+    off = c * chunk_n
 
-    _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr, sem)
+    @pl.when(c == 0)
+    def _stage():        # rows stay resident across this block's chunk sweep
+        _dma_query_and_neighbour_rows(x_ref, qid_ref, nbr_ref, q_scr, n_scr,
+                                      sem)
 
     alpha = alpha_ref[0, 0]
     y = q_scr[...].astype(jnp.float32)              # (bb, d)
@@ -337,16 +401,25 @@ def _ne_forces_scatter_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
 
     def accumulate(scat_ref, agg, edge, k0, size, back):
         # Index-binned accumulation: serialised read-modify-writes handle
-        # duplicate targets (negatives / shared neighbours) exactly.
+        # duplicate targets (negatives / shared neighbours) exactly; the
+        # chunk guard keeps every write inside this step's (chunk_n, d)
+        # slab.
         def nbr_body(r):
             def body(k, _):
                 t = nbr_ref[r, k0 + k]
-                scat_ref[0, t] += -edge[r, k]
+
+                @pl.when((t >= off) & (t < off + chunk_n))
+                def _in_chunk():
+                    scat_ref[0, t - off] += -edge[r, k]
                 return _
             jax.lax.fori_loop(0, size, body, None)
 
         def row_body(r, _):
-            scat_ref[0, qid_ref[r]] += agg[r]
+            q = qid_ref[r]
+
+            @pl.when((q >= off) & (q < off + chunk_n))
+            def _in_chunk():
+                scat_ref[0, q - off] += agg[r]
             if back:
                 nbr_body(r)
             return _
@@ -367,10 +440,11 @@ def _ne_forces_scatter_kernel(qid_ref, nbr_ref, alpha_ref, coef_ref, x_ref,
 
 @functools.partial(
     jax.jit, static_argnames=("segments", "scatter_back", "block_b",
-                              "interpret"))
+                              "chunk_n", "interpret"))
 def ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha, *,
                              segments: tuple, scatter_back: tuple = None,
-                             block_b: int = None, interpret: bool = False):
+                             block_b: int = None, chunk_n: int = None,
+                             interpret: bool = False):
     """Scatter-fused segmented force kernel (see block comment above).
 
     Args match :func:`ne_forces_gather_pallas` except:
@@ -378,6 +452,10 @@ def ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha, *,
         segments accumulate each edge's reaction force (-edge) into the
         neighbour's row (the symmetrisation); False segments (e.g.
         negative samples) contribute only the query-side aggregate.
+      chunk_n: target rows binned per grid step (default: all N in one
+        chunk).  The resident per-segment slab is (chunk_n, d), so
+        ``chunk_n`` bounds VMEM regardless of N; each block's staged rows
+        are reused across its chunk sweep (one DMA round per block).
     Returns:
       scats: tuple of (N, d) f32 per-segment displacement-field partials,
         already reduced over grid blocks -- scats[s][i] carries every
@@ -394,6 +472,10 @@ def ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha, *,
     assert K == sum(size for _, size in segments), (K, segments)
     assert all(mode in ("attraction", "repulsion") for mode, _ in segments)
     assert all(size > 0 for _, size in segments), segments
+    if chunk_n is None:
+        chunk_n = N
+    chunk_n = min(chunk_n, N)
+    assert chunk_n >= 1, chunk_n
 
     qid = jnp.clip(qid.astype(jnp.int32), 0, N - 1)
     nbr_idx = jnp.clip(nbr_idx.astype(jnp.int32), 0, N - 1)
@@ -419,26 +501,28 @@ def ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha, *,
     alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
 
     G = Bp // block_b
+    Np = _round_up(N, chunk_n)
+    n_chunks = Np // chunk_n
     outs = pl.pallas_call(
         functools.partial(_ne_forces_scatter_kernel, segments=segments,
-                          scatter_back=scatter_back),
-        grid=(G,),
+                          scatter_back=scatter_back, chunk_n=chunk_n),
+        grid=(G, n_chunks),
         in_specs=[
-            pl.BlockSpec((block_b,), lambda i: (i,),
+            pl.BlockSpec((block_b,), lambda i, c: (i,),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_b, K), lambda i: (i, 0),
+            pl.BlockSpec((block_b, K), lambda i, c: (i, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1), lambda i: (0, 0),
+            pl.BlockSpec((1, 1), lambda i, c: (0, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, K), lambda i, c: (i, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=(
-            [pl.BlockSpec((1, N, d), lambda i: (i, 0, 0))] * S
-            + [pl.BlockSpec((block_b, 1), lambda i: (i, 0))] * S
+            [pl.BlockSpec((1, chunk_n, d), lambda i, c: (i, c, 0))] * S
+            + [pl.BlockSpec((block_b, 1), lambda i, c: (i, 0))] * S
         ),
         out_shape=(
-            [jax.ShapeDtypeStruct((G, N, d), jnp.float32)] * S
+            [jax.ShapeDtypeStruct((G, Np, d), jnp.float32)] * S
             + [jax.ShapeDtypeStruct((Bp, 1), jnp.float32)] * S
         ),
         scratch_shapes=[
@@ -449,6 +533,6 @@ def ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha, *,
         interpret=interpret,
     )(qid, nbr_idx, alpha_arr, coef, x)
     # the final cheap XLA reduction of the per-grid-block partials
-    scats = tuple(jnp.sum(o, axis=0) for o in outs[:S])
+    scats = tuple(jnp.sum(o, axis=0)[:N] for o in outs[:S])
     wsums = tuple(o[:B, 0] for o in outs[S:])
     return scats, wsums

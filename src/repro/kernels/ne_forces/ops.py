@@ -18,18 +18,37 @@ def _default_backend() -> str:
     return "pallas" if platform == "tpu" else "xla"
 
 
-# VMEM budget for the scatter kernel's resident per-segment (N, d) slabs.
-# Mosaic pads the trailing dim to the 128-lane tile and these blocks stay
-# resident for a whole grid step, so S * N * 512B at d<=128 must leave
-# room for the neighbour scratch; past this, fall back to the XLA
-# segment-sum ref (HBM-side scatters, still no per-edge contract).
+# VMEM budget for the scatter kernel's resident per-segment (chunk_n, d)
+# slabs.  Mosaic pads the trailing dim to the 128-lane tile and all S
+# segment slabs stay resident for a whole grid step, so S * chunk_n *
+# 512B at d<=128 must leave room for the neighbour scratch.  Unlike the
+# pre-chunking kernel (whole (N, d) resident -> hard N cap, XLA fallback
+# past ~6.8k rows at d=2/S=3) the budget now sizes the *chunk*: N only
+# raises the chunk count.  The XLA segment-sum ref remains as a guard
+# for degenerate plans (chunk counts so high the staged-row reuse stops
+# paying for the replayed per-chunk sweep).
 _SCATTER_VMEM_BUDGET = 10 * 2 ** 20
+_SCATTER_MAX_CHUNKS = 64
 
 
-def _scatter_slabs_fit_vmem(x, segments) -> bool:
-    n, d = x.shape
+def scatter_chunk_plan(n: int, d: int, n_segments: int):
+    """Rows binned per grid step so the S resident slabs fit VMEM.
+
+    Returns ``chunk_n`` (== n when everything fits in one chunk), or
+    ``None`` when even a degenerate chunking can't make the kernel
+    worthwhile -> caller falls back to the XLA segment-sum ref.
+    """
     lane_padded = -(-d // 128) * 128
-    return len(segments) * n * lane_padded * 4 <= _SCATTER_VMEM_BUDGET
+    bytes_per_row = n_segments * lane_padded * 4
+    max_rows = _SCATTER_VMEM_BUDGET // max(bytes_per_row, 1)
+    if max_rows >= n:
+        return n
+    chunk_n = (max_rows // 8) * 8          # keep sublane-tile alignment
+    if chunk_n < 8:
+        return None
+    if -(-n // chunk_n) > _SCATTER_MAX_CHUNKS:
+        return None
+    return chunk_n
 
 
 def ne_forces(y, nbr, coef, alpha, *, mode: str, backend: str = "auto"):
@@ -76,16 +95,19 @@ def ne_forces_gather(x, qid, nbr_idx, coef, alpha, *, segments,
         assert emit_edges is None, "emit_edges is an edge-mode option"
         if scatter_back is not None:
             scatter_back = tuple(bool(b) for b in scatter_back)
-        if backend == "pallas" and not _scatter_slabs_fit_vmem(x, segments):
+        chunk_n = scatter_chunk_plan(x.shape[0], x.shape[1], len(segments))
+        if backend in ("pallas", "interpret") and chunk_n is None:
             backend = "xla"
         if backend == "pallas":
             return ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha,
                                             segments=segments,
-                                            scatter_back=scatter_back)
+                                            scatter_back=scatter_back,
+                                            chunk_n=chunk_n)
         if backend == "interpret":
             return ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha,
                                             segments=segments,
                                             scatter_back=scatter_back,
+                                            chunk_n=chunk_n,
                                             interpret=True)
         if backend == "xla":
             return ne_forces_scatter_ref(x, qid, nbr_idx, coef, alpha,

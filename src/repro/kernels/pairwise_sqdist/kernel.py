@@ -15,6 +15,7 @@ output block, enabling accumulation).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -98,70 +99,133 @@ def _round_up(x: int, mult: int) -> int:
 #
 # The index slab is staged into SMEM by the pipeline (BlockSpec with
 # memory_space=SMEM) so DMA source addresses are scalar reads; SMEM
-# footprint is O(block_b * C), never O(B).  All row-chunk DMAs of a grid
-# step are issued back-to-back on one semaphore and drained in issue order
-# -- with per-row destination slots there is no WAR hazard, so a full
-# in-flight window beats a 2-slot double buffer.
+# footprint is O(block_b * C), never O(B).
+#
+# Pipelining (two orthogonal levers):
+#   * double-buffered b loop: the block's rows are processed in ``sub_b``
+#     sub-blocks through 2-slot VMEM staging -- sub-block p+1's row DMAs
+#     are issued *before* sub-block p is computed, so the serial
+#     issue-all/drain-all/compute-all schedule (DMA latency fully exposed)
+#     becomes DMA/compute overlap, and resident staging drops from
+#     O(block_b * (C+1) * block_m) to O(2 * sub_b * (C+1) * block_m).
+#   * persistent q: when M spans several ``block_m`` chunks, the q rows
+#     of a block are DMA'd once (all chunks, issued at j == 0 on
+#     per-chunk semaphores) into a (n_mchunks, block_b, block_m) resident
+#     slab, saving one q-row DMA round per extra M-chunk; candidate rows
+#     still stream per chunk (they are the C-fold bigger term).
 
 
 def _sqdist_gather_kernel(qid_ref, cand_ref, x_ref, out_ref, q_scr, c_scr,
-                          sem, *, m_size: int, block_m: int):
+                          q_sem, c_sem, *, m_size: int, block_m: int,
+                          sub_b: int, persistent_q: bool):
     """One (block_b, block_m) tile: gather rows by index, then accumulate.
 
     qid_ref: (block_b,) SMEM        query row ids
     cand_ref: (block_b, C) SMEM     candidate row ids
     x_ref: (N, M) ANY               source matrix (stays in HBM)
     out_ref: (block_b, C) VMEM      squared-distance accumulator
-    q_scr: (block_b, block_m), c_scr: (block_b, C, block_m) VMEM scratch
+    q_scr: (n_mchunks, block_b, block_m) if persistent_q
+           else (2, sub_b, block_m) VMEM staging
+    c_scr: (2, sub_b, C, block_m) VMEM double-buffer staging
+    q_sem: (n_mchunks,) / c_sem: (2,) DMA semaphores
     """
     j = pl.program_id(1)
     block_b, C = out_ref.shape
-    # Ragged M: clamp the last chunk's start so the DMA stays in bounds and
+    n_sub = block_b // sub_b
+    # Ragged M: clamp each chunk's start so the DMA stays in bounds and
     # mask the columns the previous chunk already covered.
-    m0 = jnp.minimum(j * block_m, m_size - block_m)
+    def chunk_start(jc):
+        return jnp.minimum(jc * block_m, m_size - block_m)
 
-    def q_dma(r):
-        return pltpu.make_async_copy(
-            x_ref.at[qid_ref[r], pl.ds(m0, block_m)], q_scr.at[r], sem)
+    m0 = chunk_start(j)
 
-    def c_dma(r, k):
-        return pltpu.make_async_copy(
-            x_ref.at[cand_ref[r, k], pl.ds(m0, block_m)], c_scr.at[r, k],
-            sem)
+    if persistent_q:
+        n_mchunks = q_scr.shape[0]
 
-    def issue(r, _):
-        q_dma(r).start()
-        jax.lax.fori_loop(0, C, lambda k, x: (c_dma(r, k).start(), x)[1],
-                          None)
+        def q_dma(jc, r):
+            return pltpu.make_async_copy(
+                x_ref.at[qid_ref[r], pl.ds(chunk_start(jc), block_m)],
+                q_scr.at[jc, r], q_sem.at[jc])
+
+        @pl.when(j == 0)
+        def _issue_all_q():
+            def per_chunk(jc, _):
+                jax.lax.fori_loop(
+                    0, block_b, lambda r, x: (q_dma(jc, r).start(), x)[1],
+                    None)
+                return _
+            jax.lax.fori_loop(0, n_mchunks, per_chunk, None)
+
+    def sub_copies(p, op):
+        """Start/wait the 2-slot staged row DMAs of sub-block ``p``."""
+        slot = p % 2
+
+        def row(lr, _):
+            r = p * sub_b + lr
+            if not persistent_q:
+                op(pltpu.make_async_copy(
+                    x_ref.at[qid_ref[r], pl.ds(m0, block_m)],
+                    q_scr.at[slot, lr], c_sem.at[slot]))
+            jax.lax.fori_loop(
+                0, C, lambda k, x: (op(pltpu.make_async_copy(
+                    x_ref.at[cand_ref[r, k], pl.ds(m0, block_m)],
+                    c_scr.at[slot, lr, k], c_sem.at[slot])), x)[1], None)
+            return _
+
+        jax.lax.fori_loop(0, sub_b, row, None)
+
+    sub_copies(0, lambda cp: cp.start())
+    if persistent_q:
+        # drain this m-chunk's q rows (issued during j == 0) while the
+        # first candidate sub-block is in flight
+        jax.lax.fori_loop(0, block_b,
+                          lambda r, x: (q_dma(j, r).wait(), x)[1], None)
+
+    def body(p, _):
+        slot = p % 2
+
+        @pl.when(p + 1 < n_sub)
+        def _prefetch():                     # overlap: copy p+1, compute p
+            sub_copies(p + 1, lambda cp: cp.start())
+
+        sub_copies(p, lambda cp: cp.wait())
+
+        base = p * sub_b
+        if persistent_q:
+            q = q_scr[j, pl.ds(base, sub_b)].astype(jnp.float32)
+        else:
+            q = q_scr[slot].astype(jnp.float32)     # (sub_b, block_m)
+        c = c_scr[slot].astype(jnp.float32)         # (sub_b, C, block_m)
+        diff = q[:, None, :] - c
+        col = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 2)
+        fresh = (m0 + col) >= j * block_m           # not already accumulated
+        partial = jnp.sum(jnp.where(fresh, diff * diff, 0.0), axis=-1)
+
+        @pl.when(j == 0)
+        def _init():
+            out_ref[pl.ds(base, sub_b)] = partial
+
+        @pl.when(j > 0)
+        def _acc():
+            out_ref[pl.ds(base, sub_b)] += partial
+
         return _
 
-    def drain(r, _):
-        q_dma(r).wait()
-        jax.lax.fori_loop(0, C, lambda k, x: (c_dma(r, k).wait(), x)[1],
-                          None)
-        return _
+    jax.lax.fori_loop(0, n_sub, body, None)
 
-    jax.lax.fori_loop(0, block_b, issue, None)
-    jax.lax.fori_loop(0, block_b, drain, None)
 
-    q = q_scr[...].astype(jnp.float32)              # (block_b, block_m)
-    c = c_scr[...].astype(jnp.float32)              # (block_b, C, block_m)
-    diff = q[:, None, :] - c
-    col = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 2)
-    fresh = (m0 + col) >= j * block_m               # not already accumulated
-    partial = jnp.sum(jnp.where(fresh, diff * diff, 0.0), axis=-1)
-
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = partial
-
-    @pl.when(j > 0)
-    def _acc():
-        out_ref[...] += partial
+def _pick_sub_b(block_b: int) -> int:
+    """Largest-throughput sub-block that divides ``block_b``: small blocks
+    stay monolithic (nothing to overlap), bigger ones pipeline in 8-row
+    (one f32 sublane tile) sub-blocks."""
+    if block_b <= 16 or block_b % 8:
+        return block_b
+    return 8
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_m", "interpret"))
+    jax.jit, static_argnames=("block_b", "block_m", "sub_b", "persistent_q",
+                              "interpret"))
 def pairwise_sqdist_gather_pallas(
     x: jnp.ndarray,
     qid: jnp.ndarray,
@@ -169,6 +233,8 @@ def pairwise_sqdist_gather_pallas(
     *,
     block_b: int = 128,
     block_m: int = 512,
+    sub_b: int = None,
+    persistent_q: bool = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """(N, M), (B,), (B, C) -> (B, C) f32: ``||X[qid[b]] - X[cand[b,j]]||^2``.
@@ -177,6 +243,10 @@ def pairwise_sqdist_gather_pallas(
     (SENTINEL handling lives in the KNN merge).  B is padded to ``block_b``
     with row-0 gathers that are dropped on exit; M is tiled at ``block_m``
     with a clamped+masked final chunk, so X is never padded or copied.
+
+    ``sub_b`` (must divide ``block_b``) sets the double-buffer sub-block;
+    ``persistent_q`` keeps all M-chunks of the block's q rows VMEM-resident
+    (auto: on when M spans >1 chunk and the slab stays under ~4MB).
     """
     N, M = x.shape
     B, = qid.shape
@@ -188,18 +258,31 @@ def pairwise_sqdist_gather_pallas(
 
     block_m = min(block_m, M)
     block_b = min(block_b, _round_up(B, 8))
-    # keep the (C+1) row-chunk scratch slab comfortably inside VMEM
-    while block_b > 8 and (C + 1) * block_b * block_m * x.dtype.itemsize \
-            > 8 * 2 ** 20:
+    if sub_b is None:
+        sub_b = _pick_sub_b(block_b)
+    assert block_b % sub_b == 0, (block_b, sub_b)
+    # keep the 2-slot (C+1) row-chunk staging comfortably inside VMEM
+    while block_b > 8 and 2 * min(sub_b, block_b) * (C + 1) * block_m \
+            * x.dtype.itemsize > 8 * 2 ** 20:
         block_b //= 2
+        # a halved block_b may no longer be a multiple of sub_b: every row
+        # of a block must land in some sub-block, so re-derive a divisor
+        sub_b = math.gcd(sub_b, block_b)
+    n_mchunks = _round_up(M, block_m) // block_m
+    if persistent_q is None:
+        persistent_q = n_mchunks > 1 and n_mchunks * block_b * block_m \
+            * x.dtype.itemsize <= 4 * 2 ** 20
     Bp = _round_up(B, block_b)
     if Bp != B:
         qid = jnp.pad(qid, (0, Bp - B))
         cand = jnp.pad(cand, ((0, Bp - B), (0, 0)))
 
-    grid = (Bp // block_b, _round_up(M, block_m) // block_m)
+    grid = (Bp // block_b, n_mchunks)
+    q_scr_shape = (n_mchunks, block_b, block_m) if persistent_q \
+        else (2, sub_b, block_m)
     out = pl.pallas_call(
-        functools.partial(_sqdist_gather_kernel, m_size=M, block_m=block_m),
+        functools.partial(_sqdist_gather_kernel, m_size=M, block_m=block_m,
+                          sub_b=sub_b, persistent_q=persistent_q),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b,), lambda i, j: (i,),
@@ -211,9 +294,10 @@ def pairwise_sqdist_gather_pallas(
         out_specs=pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, C), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((block_b, block_m), x.dtype),
-            pltpu.VMEM((block_b, C, block_m), x.dtype),
-            pltpu.SemaphoreType.DMA(()),
+            pltpu.VMEM(q_scr_shape, x.dtype),
+            pltpu.VMEM((2, sub_b, C, block_m), x.dtype),
+            pltpu.SemaphoreType.DMA((n_mchunks,)),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
     )(qid, cand, x)

@@ -99,6 +99,56 @@ def test_funcsne_distributed_scatter_fused_matches_legacy_epilogue():
     assert "OK" in out
 
 
+def test_funcsne_distributed_chunked_step_matches_sequential():
+    """make_distributed_step(chunk=T) on a (data, model) mesh == T
+    sequential distributed dispatches: discrete state bit-equal, float
+    state to fp32 tolerance (the while-body codegen context costs ulps,
+    same as single-device -- see tests/test_chunked_driver.py), and the
+    snapshot ring + metrics come back replicated."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro import compat
+        from repro.data.synthetic import blobs
+        from repro.core import funcsne
+
+        X, _ = blobs(n=256, dim=16, n_centers=5, center_std=6.0)
+        Xj = jnp.asarray(X)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        cfg = funcsne.FuncSNEConfig(n_points=256, dim_hd=16, backend="xla")
+        st0 = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+        hp = funcsne.default_hparams(256)
+        Xs = jax.device_put(Xj, NamedSharding(mesh, P(None, "model")))
+        cp = lambda s: jax.device_put(
+            jax.tree.map(lambda a: jnp.array(a, copy=True), s),
+            NamedSharding(mesh, P()))
+
+        T = 6
+        step, _ = funcsne.make_distributed_step(cfg, mesh)
+        st_seq = cp(st0)
+        for _ in range(T):
+            st_seq = step(st_seq, Xs, hp)
+
+        chunk, _ = funcsne.make_distributed_step(cfg, mesh, chunk=T,
+                                                 snapshot_every=3)
+        st_c, snaps, metrics = chunk(cp(st0), Xs, hp)
+        assert int(metrics.step) == T and int(metrics.n_snapshots) == 2
+        assert snaps.shape[1:] == (256, 2), snaps.shape
+        for name in funcsne.FuncSNEState._fields:
+            a = np.asarray(getattr(st_c, name))
+            b = np.asarray(getattr(st_seq, name))
+            if a.dtype.kind != 'f':
+                np.testing.assert_array_equal(a, b, err_msg=name)
+            else:
+                finite = np.isfinite(b)
+                scale = float(np.max(np.abs(b[finite]))) + 1e-9
+                np.testing.assert_allclose(a[finite], b[finite], rtol=1e-4,
+                                           atol=1e-5 * scale, err_msg=name)
+        print("OK distributed chunk == sequential")
+    """)
+    assert "OK" in out
+
+
 def test_lm_train_step_compiles_and_runs_on_mesh():
     out = _run("""
         import dataclasses, jax, jax.numpy as jnp

@@ -221,6 +221,73 @@ def test_scatter_fused_step_trajectory_equivalent():
     assert abs(q_s - q_l) < 0.05, (q_s, q_l)
 
 
+def test_dynamic_dataset_fused_parity():
+    """add_points / remove_points under the fused kernels: activating and
+    deactivating rows mid-run must follow the exact same trajectory as the
+    legacy pre-gather wiring (the fused kernels' index clipping + coef
+    masking, not dense gathers, now carry the inactive-row semantics)."""
+    X, _ = blobs(n=240, dim=8, n_centers=3, center_std=5.0, seed=9)
+    Xj = jnp.asarray(X)
+    kw = dict(n_points=240, dim_hd=8, backend="xla", scatter_fused=False)
+    cfg_fused = funcsne.FuncSNEConfig(gather_fused=True, **kw)
+    cfg_legacy = funcsne.FuncSNEConfig(gather_fused=False, **kw)
+    active0 = jnp.arange(240) < 160
+
+    def run(cfg):
+        st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg,
+                                active=active0)
+        step = jax.jit(lambda s, x, h: funcsne.funcsne_step(cfg, s, x, h))
+        hp = funcsne.default_hparams(240)
+        for _ in range(15):
+            st = step(st, Xj, hp)
+        st = funcsne.add_points(st, jnp.arange(160, 240),
+                                jax.random.PRNGKey(5))
+        for _ in range(15):
+            st = step(st, Xj, hp)
+        st = funcsne.remove_points(st, jnp.arange(0, 40))
+        for _ in range(15):
+            st = step(st, Xj, hp)
+        return st
+
+    st_f, st_l = run(cfg_fused), run(cfg_legacy)
+    for name in ("Y", "vel", "gains", "hd_idx", "hd_d", "ld_idx", "ld_d",
+                 "beta", "active", "new_flag", "zhat", "ema_new_frac"):
+        np.testing.assert_array_equal(np.asarray(getattr(st_f, name)),
+                                      np.asarray(getattr(st_l, name)),
+                                      err_msg=name)
+    # removed rows must have frozen in place on both paths
+    assert not bool(st_f.active[:40].any())
+
+
+def test_dynamic_dataset_scatter_fused_respects_membership():
+    """Same add/remove sequence under the scatter-fused epilogue (fp32
+    reassociation-level path, so no bit contract): inactive rows stay
+    frozen, re-activated rows move, everything stays finite."""
+    X, _ = blobs(n=200, dim=8, n_centers=3, center_std=5.0, seed=10)
+    Xj = jnp.asarray(X)
+    cfg = funcsne.FuncSNEConfig(n_points=200, dim_hd=8, backend="xla",
+                                gather_fused=True, scatter_fused=True)
+    st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg,
+                            active=jnp.arange(200) < 140)
+    step = jax.jit(lambda s, x, h: funcsne.funcsne_step(cfg, s, x, h))
+    hp = funcsne.default_hparams(200)
+    for _ in range(20):
+        st = step(st, Xj, hp)
+    frozen_before = np.asarray(st.Y[140:])
+    st = funcsne.add_points(st, jnp.arange(140, 200), jax.random.PRNGKey(3))
+    y_at_activation = np.asarray(st.Y[140:])
+    for _ in range(30):
+        st = step(st, Xj, hp)
+    np.testing.assert_array_equal(frozen_before, y_at_activation)
+    assert float(np.abs(np.asarray(st.Y[140:]) - y_at_activation).max()) > 0
+    st = funcsne.remove_points(st, jnp.arange(0, 50))
+    y_removed = np.asarray(st.Y[:50])
+    for _ in range(20):
+        st = step(st, Xj, hp)
+    np.testing.assert_array_equal(np.asarray(st.Y[:50]), y_removed)
+    assert bool(jnp.isfinite(st.Y).all())
+
+
 def test_gather_fused_init_state_bit_equivalent():
     """init_state through the index-taking kernels == legacy gathers."""
     from repro.data.synthetic import blobs as _blobs

@@ -71,6 +71,51 @@ def test_pairwise_sqdist_gather_sweep(n, m, b, c, bb, bm, dtype):
                                rtol=tol, atol=tol * m)
 
 
+@pytest.mark.parametrize("sub_b,persistent_q", [
+    (8, False),      # 2-slot double buffer, per-chunk q staging
+    (8, True),       # double buffer + persistent q slab
+    (16, None),      # monolithic sub-block (no pipelining), auto q
+    (None, True),    # auto sub_b, forced persistent q
+])
+def test_pairwise_sqdist_gather_pipeline_variants(sub_b, persistent_q):
+    """The double-buffered b loop and the persistent-q slab are pure
+    scheduling: every (sub_b, persistent_q) point must agree with the
+    ref, including multi-M-chunk grids with a ragged final chunk."""
+    rng = np.random.default_rng(17)
+    n, m, b, c = 45, 300, 37, 5            # 5 ragged M-chunks at bm=64
+    x = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    cand = jnp.asarray(rng.integers(-2, n + 3, (b, c)).astype(np.int32))
+    got = pairwise_sqdist_gather_pallas(x, qid, cand, block_b=16,
+                                        block_m=64, sub_b=sub_b,
+                                        persistent_q=persistent_q,
+                                        interpret=True)
+    want = pairwise_sqdist_gather_ref(x, qid, cand)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("sub_b", [8, 16, 32])
+def test_ne_forces_gather_double_buffer_sub_blocks(sub_b):
+    """Sub-block size is pure scheduling for the force kernel too."""
+    rng = np.random.default_rng(23)
+    n, b, d = 50, 37, 3
+    segments = (("attraction", 4), ("repulsion", 3), ("repulsion", 2))
+    k = 9
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    nbr = jnp.asarray(rng.integers(-1, n + 2, (b, k)).astype(np.int32))
+    coef = jnp.asarray(rng.random((b, k)).astype(np.float32))
+    got = ne_forces_gather_pallas(x, qid, nbr, coef, 1.3, segments=segments,
+                                  block_b=32, sub_b=sub_b, interpret=True)
+    want = ne_forces_gather_ref(x, qid, nbr, coef, 1.3, segments=segments)
+    for gs, ws, name in zip(got, want, ("agg", "edge", "wsum")):
+        for s, (g, w) in enumerate(zip(gs, ws)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{name}[{s}]@sub_b={sub_b}")
+
+
 def test_pairwise_sqdist_gather_matches_pregather():
     """Same answer as the pre-gather kernel fed the explicit X[cand]."""
     rng = np.random.default_rng(7)
