@@ -1,6 +1,6 @@
-"""Microbenchmark: pre-gather vs gather-fused vs scatter-fused data paths.
+"""Microbenchmark: pre-gather vs gather-fused vs scatter/merge-fused paths.
 
-Three comparisons, at N in {2k, 16k} with C/K at FuncSNEConfig defaults:
+Four comparisons, at N in {2k, 16k} with C/K at FuncSNEConfig defaults:
 
   * ``pairwise_sqdist``: explicit ``X[cand]`` + pre-gather kernel vs the
     index-taking ``pairwise_sqdist_gather``.
@@ -10,6 +10,11 @@ Three comparisons, at N in {2k, 16k} with C/K at FuncSNEConfig defaults:
   * force *epilogue*: the edge-emitting launch + three XLA ``.at[].add``
     symmetrisation scatters vs the scatter-fused launch whose (N, d)
     per-segment partials make the displacement field three AXPYs.
+  * neighbour *selection* epilogue: the XLA pipeline
+    (``dedup_candidates``'s (N, C, K)/(N, C, C) broadcast masks +
+    candidate-distance round-trip + ``merge_knn``'s top_k over (N, K+C))
+    vs the merge-fused selection (the kernel's stable-rank dedup+merge as
+    flat compare/select arithmetic -- no sort, no broadcast tensors).
 
 Wall-clock here times the *XLA lowering* of both paths end-to-end (the
 Pallas kernels target TPU; interpret mode is an interpreter, so its
@@ -33,6 +38,8 @@ import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.funcsne import FuncSNEConfig
+from repro.core.knn import dedup_candidates, merge_knn
+from repro.kernels.knn_merge.ref import knn_merge_ref, knn_merge_rank_ref
 from repro.kernels.ne_forces.ref import (ne_forces_gather_ref, ne_forces_ref,
                                          ne_forces_scatter_ref)
 from repro.kernels.pairwise_sqdist.ref import (pairwise_sqdist_gather_ref,
@@ -197,6 +204,47 @@ def run(ns=(2048, 16384), m=192, repeats=10):
         ratio = us_edge / max(us_scat, 1e-9)
         rows.append(row(f"kbench_epilogue_xla_ratio_n{n}", ratio,
                         f"edges_us/scatter_us={ratio:.3f} (ratio, not us)"))
+
+        # ---- neighbour selection epilogue: XLA dedup+top_k vs merge-fused.
+        # Both sides score candidates identically (the gather ref); the A/B
+        # isolates the *selection*: broadcast dedup masks + lax.top_k vs
+        # the kernel's stable-rank compare/select (knn_merge_rank_ref is
+        # that algorithm as flat XLA).  Sorted current lists mirror the
+        # state invariant.
+        k_sel = k_hd
+        cur0 = rng.integers(0, n, (n, k_sel)).astype(np.int32)
+        d0 = np.asarray(pairwise_sqdist_gather_ref(X, qid,
+                                                   jnp.asarray(cur0)))
+        order = np.argsort(d0, axis=1, kind="stable")
+        cur_idx = jnp.asarray(np.take_along_axis(cur0, order, axis=1))
+        cur_d = jnp.asarray(np.take_along_axis(d0, order, axis=1))
+
+        def sel_topk(X, qid, cur_idx, cur_d, cand):
+            valid = dedup_candidates(qid, cur_idx, cand)
+            cand_d = pairwise_sqdist_gather_ref(X, qid, cand)
+            return merge_knn(cur_idx, cur_d, cand, cand_d, valid)
+
+        def sel_rank(X, qid, cur_idx, cur_d, cand):
+            return knn_merge_rank_ref(X, qid, cur_idx, cur_d, cand)
+
+        us_topk, us_rank = _bench_pair(sel_topk, sel_rank, X, qid, cur_idx,
+                                       cur_d, cand, repeats=n_reps)
+        # TPU HBM model for the selection epilogue alone (scoring traffic
+        # is identical on both sides): the XLA path materialises the
+        # (N, C, K) + (N, C, C) pred dedup broadcasts, round-trips the
+        # (N, C) candidate distances, and top_k re-reads + rewrites the
+        # (N, K+C) concatenation; merge-fused writes only the (N, K)
+        # idx/d lists + the (N,) improved flags from VMEM.
+        b_topk = (n * C * k_sel + n * C * C
+                  + 2.0 * 4.0 * n * C + 2.0 * 8.0 * n * (k_sel + C))
+        b_rank = 8.0 * n * k_sel + 4.0 * n
+        rows.append(row(f"kbench_select_topk_n{n}", us_topk,
+                        f"modeled_tpu_hbm={_mb(b_topk)};sorts=1"))
+        rows.append(row(f"kbench_select_merge_n{n}", us_rank,
+                        f"modeled_tpu_hbm={_mb(b_rank)};sorts=0"))
+        ratio = us_topk / max(us_rank, 1e-9)
+        rows.append(row(f"kbench_select_xla_ratio_n{n}", ratio,
+                        f"topk_us/merge_us={ratio:.3f} (ratio, not us)"))
     return rows
 
 
@@ -258,6 +306,49 @@ def smoke_kernel_launches():
     for g, w in zip(got[0] + got[1], want[0] + want[1]):
         close(g, w, "ne_forces_scatter")
     yield row("ksmoke_launch_forces_scatter", dt * 1e6, "interpret-mode")
+
+    # merge-fused selection: quarter-integer coordinates make distances
+    # exact, so the parity check is discrete (indices + flags), not
+    # tolerance-based
+    from repro.kernels.knn_merge.kernel import knn_merge_pallas
+
+    Xq = jnp.asarray((rng.integers(-8, 9, (n, m)) / 4.0).astype(np.float32))
+    k_sel = 6
+    cur0 = rng.integers(0, n, (b, k_sel)).astype(np.int32)
+    d0 = np.asarray(pairwise_sqdist_gather_ref(Xq, qid, jnp.asarray(cur0)))
+    order = np.argsort(d0, axis=1, kind="stable")
+    cur_idx = jnp.asarray(np.take_along_axis(cur0, order, axis=1))
+    cur_d = jnp.asarray(np.take_along_axis(d0, order, axis=1))
+    active = jnp.ones((b, 5), bool)
+    cur_valid = jnp.ones((b, k_sel), bool)
+
+    def eq(a, ref, what):
+        for g, w in zip(a, ref):
+            if not np.array_equal(np.asarray(g), np.asarray(w)):
+                raise AssertionError(f"smoke parity failed: {what}")
+
+    _, dt = timed(lambda: jax.block_until_ready(
+        knn_merge_pallas(Xq, qid, cur_idx, cur_d, cand, active,
+                         rescore=False, block_b=16, block_m=8,
+                         interpret=True)))
+    eq(knn_merge_pallas(Xq, qid, cur_idx, cur_d, cand, active,
+                        rescore=False, block_b=16, block_m=8,
+                        interpret=True),
+       knn_merge_ref(Xq, qid, cur_idx, cur_d, cand, cand_active=active),
+       "knn_merge")
+    yield row("ksmoke_launch_knn_merge", dt * 1e6, "interpret-mode")
+
+    _, dt = timed(lambda: jax.block_until_ready(
+        knn_merge_pallas(Xq, qid, cur_idx, cur_valid, cand, active,
+                         rescore=True, block_b=16, block_m=8,
+                         interpret=True)))
+    eq(knn_merge_pallas(Xq, qid, cur_idx, cur_valid, cand, active,
+                        rescore=True, block_b=16, block_m=8,
+                        interpret=True),
+       knn_merge_ref(Xq, qid, cur_idx, None, cand, cand_active=active,
+                     cur_valid=cur_valid),
+       "knn_merge_rescore")
+    yield row("ksmoke_launch_knn_merge_rescore", dt * 1e6, "interpret-mode")
 
 
 def main() -> None:

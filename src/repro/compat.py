@@ -36,6 +36,21 @@ def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
     return jax.make_mesh(axis_shapes, axis_names, **kwargs)
 
 
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs):
+    """Mosaic compiler params across the ``TPUCompilerParams`` ->
+    ``CompilerParams`` rename (jax 0.4.x vs newer).  Used to annotate
+    pallas grids with ``dimension_semantics`` ('parallel' axes may be
+    split across TensorCores; 'arbitrary' axes are sequential revisits,
+    e.g. accumulation over feature chunks)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return cls(**kwargs)
+
+
 if hasattr(jax, "shard_map"):
     def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,

@@ -40,6 +40,12 @@ Config flag matrix (orthogonal, all combinations tested):
   ``scatter_fused``  True: symmetrisation binned in-kernel into (N, d)
                      partials (§H14; requires gather_fused); False:
                      edge-emitting epilogue + XLA scatters.
+  ``merge_fused``    True: the neighbour-selection epilogue (dedup +
+                     sorted top-K merge) runs inside the gather kernel
+                     (§H16; requires gather_fused; the HD phase falls
+                     back under feature-axis sharding); False: XLA
+                     ``dedup_candidates`` + ``merge_knn`` epilogue
+                     (bit-equivalence anchor on the 'xla' backend).
   ``backend``        'auto' (pallas on TPU else xla) | 'pallas' |
                      'interpret' | 'xla'.  The scatter kernel's VMEM
                      plan (ne_forces/ops.py: ~10MB budget, N-chunked
@@ -91,6 +97,18 @@ are psum'd -- tensor parallelism for the NE.  Passing ``ctx=AxisCtx()``
         (chunk(a) then chunk(b) == chunk(a+b)); a handful of
         ``optimization_barrier``\\ s pin scalar EMA/schedule rounding so
         the traced chunk tracks the eager host loop it replaced.
+  H16   merge-fused neighbour selection: after the gather kernel has the
+        candidate distances in VMEM, the dedup (self / current-list /
+        earlier-candidate / SENTINEL) and the sorted top-K insertion run
+        *in-register* and only the new (n, K) idx/d lists + a per-row
+        ``improved`` flag leave the kernel -- the (n, C) distance buffer,
+        the (n, C, K)/(n, C, C) dedup broadcast tensors and
+        ``merge_knn``'s ``lax.top_k`` sort vanish from the step HLO.
+        Applies to HD refinement (stored sorted distances ride in) and LD
+        refinement (current rows re-scored in the same sweep).  With the
+        scan-chunked driver the removed epilogue would otherwise run T
+        times per dispatch.  ``cfg.merge_fused=False`` restores the XLA
+        selection epilogue (bit-equivalence anchor / A-B benches).
 """
 from __future__ import annotations
 
@@ -106,6 +124,7 @@ from repro import compat
 from repro.core import affinities
 from repro.core import knn as knn_lib
 from repro.core.knn import SENTINEL
+from repro.kernels.knn_merge.ops import knn_merge
 from repro.kernels.ne_forces.ops import ne_forces, ne_forces_gather
 from repro.kernels.pairwise_sqdist.ops import (pairwise_sqdist,
                                                pairwise_sqdist_gather)
@@ -148,6 +167,13 @@ class FuncSNEConfig:
     # edge-emitting kernel + XLA ``.at[].add`` scatters.  Only takes
     # effect with gather_fused (the scatter kernel is index-taking).
     scatter_fused: bool = True
+    # merge-fused neighbour selection (§Perf H16): dedup + sorted top-K
+    # merge happen inside the gather kernel; False keeps the XLA
+    # selection epilogue (dedup_candidates -> distance kernel ->
+    # merge_knn's top_k).  Only takes effect with gather_fused; the HD
+    # phase falls back automatically under feature-axis sharding (the
+    # merge needs the psum'd full distances).
+    merge_fused: bool = True
 
     @property
     def c_hd(self) -> int:
@@ -283,11 +309,21 @@ def _hd_refine(cfg: FuncSNEConfig, st: FuncSNEState, X, rng, ctx: AxisCtx):
         parts.append(jax.lax.dynamic_slice_in_dim(rev, start, n_loc))
     cand = jnp.concatenate(parts, axis=1)
 
-    valid = knn_lib.dedup_candidates(ids, hd_l, cand)
-    valid &= _take(st.active, cand)
-    cand_d = _row_sqdist(X, ids, cand, ctx, cfg)
-    new_idx, new_d, improved = knn_lib.merge_knn(hd_l, hd_d_l, cand, cand_d,
-                                                 valid)
+    if cfg.merge_fused and cfg.gather_fused and ctx.feat is None:
+        # §Perf H16: dedup + top-K merge run inside the gather kernel --
+        # no (n, C) distance round-trip, no (n, C, K)/(n, C, C) dedup
+        # broadcast tensors, no top_k in the step HLO.  (Feature-axis
+        # sharding keeps the legacy path: the merge needs the psum'd
+        # full distances.)
+        new_idx, new_d, improved = knn_merge(
+            X, ids, hd_l, hd_d_l, cand,
+            cand_active=_take(st.active, cand), backend=cfg.backend)
+    else:
+        valid = knn_lib.dedup_candidates(ids, hd_l, cand)
+        valid &= _take(st.active, cand)
+        cand_d = _row_sqdist(X, ids, cand, ctx, cfg)
+        new_idx, new_d, improved = knn_lib.merge_knn(hd_l, hd_d_l, cand,
+                                                     cand_d, valid)
 
     hd_idx = _gather_rows(new_idx, ctx.points)
     if ctx.points is None:
@@ -353,27 +389,40 @@ def _ld_refine(cfg: FuncSNEConfig, st: FuncSNEState, rng, ctx: AxisCtx):
         parts.append(knn_lib.sample_uniform(r[2], n_loc, n, cfg.c_ld_rand))
     cand = jnp.concatenate(parts, axis=1)
 
-    valid = knn_lib.dedup_candidates(ids, ld_l, cand)
-    valid &= _take(st.active, cand)
-
-    # refresh stored distances (embedding moved since the last merge)
-    cur_valid = (ld_l != SENTINEL) & _take(st.active, ld_l)
-    if cfg.gather_fused:
-        # §Perf H12: index-taking kernel -- no (n_loc, K+C, d) Y-gather
-        # buffers; one fused launch scores current + candidate neighbours
-        both = jnp.concatenate([ld_l, cand], axis=1)
-        both_d = pairwise_sqdist_gather(st.Y, ids, both,
-                                        backend=cfg.backend)
-        cur_d, cand_d = jnp.split(both_d, [ld_l.shape[1]], axis=1)
+    if cfg.merge_fused and cfg.gather_fused:
+        # §Perf H16: one launch gathers + re-scores current AND candidate
+        # rows (the embedding moved since the last merge), dedups and
+        # merges in-register -- the whole LD selection epilogue is gone
+        # from the step HLO.
+        cur_valid = (ld_l != SENTINEL) & _take(st.active, ld_l)
+        new_idx, new_d, _ = knn_merge(
+            st.Y, ids, ld_l, None, cand,
+            cand_active=_take(st.active, cand), cur_valid=cur_valid,
+            backend=cfg.backend)
     else:
-        y_l = st.Y[ids]
-        cur_nbr = _take(st.Y, ld_l)
-        cur_d = jnp.sum((cur_nbr - y_l[:, None, :]) ** 2, axis=-1)
-        cand_nbr = _take(st.Y, cand)
-        cand_d = jnp.sum((cand_nbr - y_l[:, None, :]) ** 2, axis=-1)
-    cur_d = jnp.where(cur_valid, cur_d, jnp.inf)
+        valid = knn_lib.dedup_candidates(ids, ld_l, cand)
+        valid &= _take(st.active, cand)
 
-    new_idx, new_d, _ = knn_lib.merge_knn(ld_l, cur_d, cand, cand_d, valid)
+        # refresh stored distances (embedding moved since the last merge)
+        cur_valid = (ld_l != SENTINEL) & _take(st.active, ld_l)
+        if cfg.gather_fused:
+            # §Perf H12: index-taking kernel -- no (n_loc, K+C, d)
+            # Y-gather buffers; one fused launch scores current +
+            # candidate neighbours
+            both = jnp.concatenate([ld_l, cand], axis=1)
+            both_d = pairwise_sqdist_gather(st.Y, ids, both,
+                                            backend=cfg.backend)
+            cur_d, cand_d = jnp.split(both_d, [ld_l.shape[1]], axis=1)
+        else:
+            y_l = st.Y[ids]
+            cur_nbr = _take(st.Y, ld_l)
+            cur_d = jnp.sum((cur_nbr - y_l[:, None, :]) ** 2, axis=-1)
+            cand_nbr = _take(st.Y, cand)
+            cand_d = jnp.sum((cand_nbr - y_l[:, None, :]) ** 2, axis=-1)
+        cur_d = jnp.where(cur_valid, cur_d, jnp.inf)
+
+        new_idx, new_d, _ = knn_lib.merge_knn(ld_l, cur_d, cand, cand_d,
+                                              valid)
     ld_idx = _gather_rows(new_idx, ctx.all_rows)
     if ctx.all_rows is None:
         ld_d = new_d
@@ -800,7 +849,7 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         schedule: Callable[[int, int, HParams], HParams] = None,
         init: str = "pca", snapshot_every: int = 0,
         callback: Callable[[int, FuncSNEState], None] = None,
-        chunk_size: int = None):
+        chunk_size: int = None, early_stop: float = None):
     """End-to-end driver on the scan-chunked step. Returns (state, snapshots).
 
     ``chunk_size`` iterations run per device dispatch (§Perf H15); the host
@@ -810,6 +859,21 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
     are computed on device.  Results are bit-invariant to ``chunk_size``;
     vs the per-step host loop this replaces, parity is to fp32 codegen
     tolerance (contract pinned in tests/test_chunked_driver.py).
+
+    ``early_stop`` (off by default) is the first :class:`ChunkMetrics`
+    consumer: after each chunk the driver reads the EMA'd mean per-active
+    displacement ``metrics.disp_ema`` -- already on the host, it is THE
+    one sync per chunk -- and stops once it falls below the threshold
+    (the embedding has converged; the remaining chunks would only stir
+    negative-sampling noise).  The returned ``state.step`` tells the
+    caller how many iterations actually ran.  NB the threshold compares
+    against the *per-chunk* EMA, which restarts from 0 each chunk and so
+    saturates at ``(1 - 0.9^chunk_size)`` of the steady-state per-step
+    displacement: at the default chunk_size=50 that factor is ~1.0, but
+    very small chunks under-read a still-moving run (chunk_size=1 reads
+    0.1x), so calibrate the threshold to the chunk size in use.  The
+    host-loop fallback evaluates the identical T=1-chunk formula
+    (``0.1 * act_disp`` per step), matching ``chunk_size=1`` exactly.
 
     A ``schedule`` is evaluated with a *traced* ``it`` inside the chunk;
     one that needs a Python ``int`` (host control flow on ``it``) is
@@ -831,7 +895,7 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
                        jax.ShapeDtypeStruct((), jnp.int32))
     except jax.errors.ConcretizationTypeError:
         return _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
-                              snapshot_every, callback)
+                              snapshot_every, callback, early_stop)
     st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
     snapshots = []
     chunks = {}         # T -> compiled program (final ragged chunk reuses it)
@@ -850,11 +914,13 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         if callback is not None:
             callback(it + T - 1, st)
         it += T
+        if early_stop is not None and float(metrics.disp_ema) < early_stop:
+            break
     return st, snapshots
 
 
 def _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
-                   snapshot_every, callback):
+                   snapshot_every, callback, early_stop=None):
     """Pre-H15 per-step host loop: kept for schedules that must see a
     Python ``it`` (``fit`` detects those and routes here)."""
     st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
@@ -866,6 +932,16 @@ def _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
             snapshots.append(jax.device_get(st.Y))
         if callback is not None:
             callback(it, st)
+        if early_stop is not None:
+            # exactly the chunk body's ChunkMetrics.disp_ema at T=1: the
+            # per-chunk EMA restarts from 0, so one step reads 0.1x the
+            # step displacement -- this loop IS the chunk_size=1 case
+            n_act = max(float(jnp.sum(st.active.astype(jnp.float32))), 1.0)
+            act_disp = float(jnp.sum(
+                jnp.abs(st.vel) * st.active[:, None].astype(jnp.float32))) \
+                / (n_act * cfg.dim_ld)
+            if 0.1 * act_disp < early_stop:
+                break
     return st, snapshots
 
 

@@ -86,9 +86,20 @@ def extract_hierarchy(X, alphas, *, cfg: Optional[funcsne.FuncSNEConfig] = None,
                       eps_quantile: float = 0.02, min_pts: int = 5, rng=None,
                       eps_sample_rows: int = 1024, eps_seed: int = 0,
                       hparams: Optional[funcsne.HParams] = None,
-                      dbscan_fn: Callable = dbscan) -> ClusterGraph:
+                      dbscan_fn: Callable = dbscan,
+                      chunk_size: int = 50) -> ClusterGraph:
     """Run the continual optimisation, snapshot per alpha level, and build
-    the cluster graph.  ``alphas`` should decrease (heavier tails)."""
+    the cluster graph.  ``alphas`` should decrease (heavier tails).
+
+    The inner optimisation runs on the scan-chunked driver (funcsne §Perf
+    H15): ``chunk_size`` iterations per device dispatch instead of the
+    old per-step host loop.  The warmup chunk evaluates the early-
+    exaggeration schedule on device from the carried step; the per-level
+    runs reuse ONE compiled chunk for every alpha (alpha is a traced
+    hyperparameter), so a deep alpha sweep costs two compiles total plus
+    any ragged-tail sizes.  The host syncs once per chunk and once per
+    level (the DBSCAN snapshot).
+    """
     import jax
     import jax.numpy as jnp
 
@@ -101,20 +112,35 @@ def extract_hierarchy(X, alphas, *, cfg: Optional[funcsne.FuncSNEConfig] = None,
     if hparams is None:
         hparams = funcsne.default_hparams(n)
     st = funcsne.init_state(rng, X, cfg)
-    step = funcsne.make_step(cfg)
 
-    # warmup at the first alpha (with early exaggeration)
-    for it in range(warmup_iters):
-        hp = funcsne.default_schedule(it, warmup_iters,
-                                      hparams._replace(
-                                          alpha=jnp.float32(alphas[0])))
-        st = step(st, X, hp)
+    chunks = {}      # (T, scheduled, horizon) -> compiled chunk program
+
+    def run_steps(st, n_steps, hp, schedule=None, horizon=None):
+        it = 0
+        while it < n_steps:
+            T = min(chunk_size, n_steps - it)
+            # the horizon is baked into the traced schedule, so it must
+            # be part of the compile key: same-T calls with a different
+            # horizon may not reuse the program
+            key = (T, schedule is not None, horizon)
+            if key not in chunks:
+                chunks[key] = funcsne.make_chunked_step(
+                    cfg, T, schedule=schedule, n_iter=horizon)
+            st, _, _ = chunks[key](st, X, hp)
+            it += T
+        return st
+
+    # warmup at the first alpha (with early exaggeration): the device-side
+    # schedule reads the carried st.step, which starts at 0 here, so it
+    # sees the same (it, warmup_iters) pairs the host loop fed make_step
+    st = run_steps(st, warmup_iters,
+                   hparams._replace(alpha=jnp.float32(alphas[0])),
+                   schedule=funcsne.default_schedule, horizon=warmup_iters)
 
     levels: List[HierarchyLevel] = []
     for alpha in alphas:
         hp = hparams._replace(alpha=jnp.float32(alpha))
-        for _ in range(iters_per_level):
-            st = step(st, X, hp)
+        st = run_steps(st, iters_per_level, hp)
         Y = np.asarray(jax.device_get(st.Y))
         eps = select_eps(Y, eps_quantile, max_rows=eps_sample_rows,
                          seed=eps_seed)

@@ -8,6 +8,9 @@ Each kernel package provides:
 
 Kernels (the compute hot-spots the paper optimises on GPU, re-tiled for TPU):
   pairwise_sqdist  -- blocked ||q - c||^2 for KNN candidate scoring (HD hot spot)
+  knn_merge        -- merge-fused refinement: candidate scoring + in-register
+                      dedup + stable top-K merge in one launch (no selection
+                      epilogue, no top_k sort, no (B, C, K) dedup broadcast)
   ne_forces        -- fused variable-tail attraction/repulsion force evaluation
   flash_attention  -- causal GQA flash attention (LM prefill hot spot)
 

@@ -1,0 +1,1 @@
+"""Merge-fused neighbour refinement: score + dedup + top-K merge in-kernel."""

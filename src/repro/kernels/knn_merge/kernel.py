@@ -1,0 +1,276 @@
+"""Pallas TPU kernel: merge-fused neighbour-list refinement.
+
+The per-iteration KNN refinement has three phases: score C candidate rows
+against each query (``pairwise_sqdist_gather``), invalidate duplicates
+(``knn_lib.dedup_candidates``), and merge the survivors into the resident
+sorted (K,) neighbour list (``knn_lib.merge_knn``).  After PRs 1-3 fused
+the scoring, the *selection* still ran as plain XLA: the dedup
+materialises (n, C, K) and (n, C, C) broadcast-compare bool tensors in
+HBM, the (n, C) candidate distances round-trip through HBM between the
+kernel and the merge, and ``merge_knn`` pays a full ``lax.top_k`` sort
+over (n, K+C) even though the resident side is already sorted.
+
+This kernel extends the gather-fused scoring loop so each row block,
+after accumulating candidate distances in VMEM, performs the dedup and
+the top-K merge *in-register* and emits only the new (n, K) idx/d arrays
+plus a per-row ``improved`` flag: no candidate-distance buffer, no dedup
+broadcast tensor, and no sort anywhere in the step HLO.
+
+The merge is a *stable-rank* selection (``merge_select``): every element
+of the virtual [current, candidate] concatenation gets its output rank
+from O((K+C)^2) vectorised compares (ties broken by concatenation index,
+exactly ``lax.top_k``'s stable order -- and exactly what a sorted
+insertion of the C candidates would produce), and rank-k elements are
+gathered into slot k by one-hot masked sums.  This is the dense,
+branch-free equivalent of NN-descent's per-candidate sorted-insertion
+update (Dong et al.); on the 8x128 VPU the quadratic compare block
+(<= (block_b, 42, 42) at config defaults) is register-resident noise next
+to the row-gather DMAs the loop already pays.
+
+Two modes share the kernel:
+  * HD refinement: the stored sorted ``cur_d`` rides in as an operand and
+    only the C candidate rows are gathered and scored.
+  * LD refinement (``rescore=True``): the embedding moved since the list
+    was built, so the kernel gathers and re-scores current *and*
+    candidate rows in one sweep (the fused current+candidate split the
+    XLA path used to do) and masks invalid current slots to +inf via
+    ``cur_valid``.
+
+Scoring IS the ``pairwise_sqdist_gather`` pipeline: ``score_gather_block``
+and ``plan_row_gather`` are imported from that package (ONE copy of the
+SMEM index slabs, 2-slot double-buffered sub-block row DMAs, persistent-q
+slab and clamped+masked final M chunk), with the accumulator landing in a
+(block_b, G) scratch instead of an output block.  Grid is
+(B/block_b, M/block_m) with ``dimension_semantics=("parallel",
+"arbitrary")``: row blocks are independent, the M axis sequentially
+revisits the block's accumulator and runs the merge on its final chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.kernels.pairwise_sqdist.kernel import (_round_up, plan_row_gather,
+                                                  score_gather_block)
+
+_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def merge_select(qid_col, cur_idx, cur_d, cand, cand_d, ext_valid):
+    """In-register dedup + stable-rank top-K merge of one row block.
+
+    Bit-reproduces ``knn_lib.dedup_candidates`` followed by
+    ``knn_lib.merge_knn`` (whose ``lax.top_k`` breaks distance ties by
+    concatenation index) as flat compare/select arithmetic: no sort, no
+    dynamic gather, no (B, C, K) HBM tensor.  Shared by the Pallas kernel
+    body and the ``knn_merge_rank_ref`` XLA implementation.
+
+    Args:
+      qid_col: (B, 1) int32 query row ids.
+      cur_idx: (B, K) int32 resident neighbour ids (SENTINEL = invalid).
+      cur_d: (B, K) f32 resident squared distances (+inf = invalid).
+      cand: (B, C) int32 candidate ids (unclipped; SENTINEL = invalid).
+      cand_d: (B, C) f32 candidate squared distances.
+      ext_valid: (B, C) bool extra validity (e.g. active-row membership).
+    Returns:
+      (new_idx (B, K) int32, new_d (B, K) f32, improved (B,) bool).
+    """
+    _, k = cur_idx.shape
+    c = cand.shape[1]
+    i32 = jnp.int32
+
+    def count(mask):                    # bool any() via i32 sum: TPU-safe
+        return jnp.sum(mask.astype(i32), axis=-1)
+
+    # ---- dedup (knn_lib.dedup_candidates semantics) ----
+    self_dup = cand == qid_col
+    in_cur = count(cand[:, :, None] == cur_idx[:, None, :]) > 0
+    ci = jax.lax.broadcasted_iota(i32, (1, c, c), 1)
+    cj = jax.lax.broadcasted_iota(i32, (1, c, c), 2)
+    within = count((cand[:, :, None] == cand[:, None, :]) & (cj < ci)) > 0
+    valid = ext_valid & ~(self_dup | in_cur | within | (cand == _SENTINEL))
+    cand_d = jnp.where(valid, cand_d, jnp.inf)
+    improved = count(cand_d < cur_d[:, k - 1:k]) > 0
+
+    # ---- stable ranks over the virtual [cur, cand] concatenation ----
+    # rank(e) = #{e': d[e'] < d[e]  or  (d[e'] == d[e] and e' before e)};
+    # "before" is concatenation order, so cur always precedes cand and
+    # within each side the original index decides -- lax.top_k's tie rule.
+    cur_e = cur_d[:, :, None]           # element being ranked
+    cand_e = cand_d[:, :, None]
+    kk = jax.lax.broadcasted_iota(i32, (1, k, k), 1)
+    kp = jax.lax.broadcasted_iota(i32, (1, k, k), 2)
+    cur_vs_cur = (cur_d[:, None, :] < cur_e) \
+        | ((cur_d[:, None, :] == cur_e) & (kp < kk))
+    cand_vs_cur = cand_d[:, None, :] < cur_e          # cand never ties-first
+    rank_cur = count(cur_vs_cur) + count(cand_vs_cur)
+    cur_vs_cand = cur_d[:, None, :] <= cand_e         # cur always ties-first
+    cand_vs_cand = (cand_d[:, None, :] < cand_e) \
+        | ((cand_d[:, None, :] == cand_e) & (cj < ci))
+    rank_cand = count(cur_vs_cand) + count(cand_vs_cand)
+
+    # ---- one-hot rank -> slot selection (ranks >= K fall off the list) ----
+    slot = jax.lax.broadcasted_iota(i32, (1, 1, k), 2)
+    hit_cur = rank_cur[:, :, None] == slot            # (B, K, K)
+    hit_cand = rank_cand[:, :, None] == slot          # (B, C, K)
+    new_d = jnp.sum(jnp.where(hit_cur, cur_d[:, :, None], 0.0), axis=1) \
+        + jnp.sum(jnp.where(hit_cand, cand_d[:, :, None], 0.0), axis=1)
+    new_idx = jnp.sum(jnp.where(hit_cur, cur_idx[:, :, None], 0), axis=1) \
+        + jnp.sum(jnp.where(hit_cand, cand[:, :, None], 0), axis=1)
+    return new_idx.astype(i32), new_d, improved
+
+
+def _knn_merge_kernel(qid_ref, gat_ref, cur_idx_ref, cand_ref, qid_v_ref,
+                      curw_ref, candval_ref, x_ref, idx_out, d_out, imp_out,
+                      acc, q_scr, c_scr, q_sem, c_sem, *, m_size: int,
+                      block_m: int, sub_b: int, persistent_q: bool,
+                      k_cur: int, rescore: bool):
+    """One (block_b, block_m) tile: gather+score rows, merge on last chunk.
+
+    qid_ref: (block_b,) SMEM        query row ids (DMA addresses)
+    gat_ref: (block_b, G) SMEM      clipped gather ids (G = C, or K+C when
+                                    ``rescore``: [cur, cand] order)
+    cur_idx_ref: (block_b, K) VMEM  unclipped resident ids (dedup compares)
+    cand_ref: (block_b, C) VMEM     unclipped candidate ids
+    qid_v_ref: (block_b, 1) VMEM    query ids (self-dedup compares)
+    curw_ref: (block_b, K) VMEM     f32 cur_d (HD) / i32 cur_valid (rescore)
+    candval_ref: (block_b, C) VMEM  i32 external candidate validity
+    x_ref: (N, M) ANY               source matrix (stays in HBM)
+    idx_out/d_out: (block_b, K)     merged neighbour list
+    imp_out: (block_b, 1) i32       per-row improved flag
+    acc: (block_b, G) VMEM          squared-distance accumulator scratch
+    q_scr/c_scr/q_sem/c_sem         score_gather_block staging (G rows)
+    """
+    score_gather_block(qid_ref, gat_ref, x_ref, acc, q_scr, c_scr, q_sem,
+                       c_sem, m_size=m_size, block_m=block_m, sub_b=sub_b,
+                       persistent_q=persistent_q)
+    j = pl.program_id(1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _merge():
+        if rescore:
+            cur_d = jnp.where(curw_ref[...] != 0, acc[:, :k_cur], jnp.inf)
+            cand_d = acc[:, k_cur:]
+        else:
+            cur_d = curw_ref[...]
+            cand_d = acc[...]
+        new_idx, new_d, improved = merge_select(
+            qid_v_ref[...], cur_idx_ref[...], cur_d, cand_ref[...], cand_d,
+            candval_ref[...] != 0)
+        idx_out[...] = new_idx
+        d_out[...] = new_d
+        imp_out[...] = improved.astype(jnp.int32)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rescore", "block_b", "block_m", "sub_b",
+                              "persistent_q", "interpret"))
+def knn_merge_pallas(
+    x: jnp.ndarray,
+    qid: jnp.ndarray,
+    cur_idx: jnp.ndarray,
+    cur_w: jnp.ndarray,
+    cand: jnp.ndarray,
+    cand_valid: jnp.ndarray,
+    *,
+    rescore: bool,
+    block_b: int = 128,
+    block_m: int = 512,
+    sub_b: int = None,
+    persistent_q: bool = None,
+    interpret: bool = False,
+):
+    """Merge-fused refinement: score, dedup and top-K merge in one launch.
+
+    Args:
+      x: (N, M) source matrix, kept in HBM/ANY memory space.
+      qid: (B,) int32 query row ids (assumed in-range).
+      cur_idx: (B, K) int32 resident neighbour ids; SENTINEL = invalid.
+      cur_w: (B, K) -- the stored sorted squared distances (f32) in HD
+        mode, or the current-slot validity mask (bool) when ``rescore``.
+      cand: (B, C) int32 candidate ids (out-of-range ids are gathered
+        clipped, exactly like the ref, and deduped on their raw value).
+      cand_valid: (B, C) bool external validity (active-row membership).
+      rescore: gather + re-score the current neighbours too (LD mode: the
+        embedding moved since ``cur_idx`` was merged).
+    Returns:
+      (new_idx (B, K) int32, new_d (B, K) f32, improved (B,) bool).
+    """
+    N, M = x.shape
+    B, K = cur_idx.shape
+    Bc, C = cand.shape
+    assert Bc == B and qid.shape == (B,), (x.shape, qid.shape, cand.shape)
+    assert cur_w.shape == (B, K), (cur_w.shape, cur_idx.shape)
+
+    qid = qid.astype(jnp.int32)
+    cur_idx = cur_idx.astype(jnp.int32)
+    cand = cand.astype(jnp.int32)
+    gat = jnp.clip(cand, 0, N - 1)
+    if rescore:
+        gat = jnp.concatenate([jnp.clip(cur_idx, 0, N - 1), gat], axis=1)
+        cur_w = cur_w.astype(jnp.int32)       # validity mask travels as i32
+    else:
+        cur_w = cur_w.astype(jnp.float32)
+    cand_valid = cand_valid.astype(jnp.int32)
+    G = gat.shape[1]
+
+    block_b, block_m, sub_b, persistent_q, n_mchunks, q_scr_shape = \
+        plan_row_gather(B, M, G, x.dtype.itemsize, block_b=block_b,
+                        block_m=block_m, sub_b=sub_b,
+                        persistent_q=persistent_q)
+    Bp = _round_up(B, block_b)
+    if Bp != B:
+        pad = Bp - B
+        qid = jnp.pad(qid, (0, pad))
+        cur_idx = jnp.pad(cur_idx, ((0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
+        gat = jnp.pad(gat, ((0, pad), (0, 0)))
+        cur_w = jnp.pad(cur_w, ((0, pad), (0, 0)))
+        cand_valid = jnp.pad(cand_valid, ((0, pad), (0, 0)))
+
+    grid = (Bp // block_b, n_mchunks)
+    outs = pl.pallas_call(
+        functools.partial(_knn_merge_kernel, m_size=M, block_m=block_m,
+                          sub_b=sub_b, persistent_q=persistent_q, k_cur=K,
+                          rescore=rescore),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, G), lambda i, j: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, C), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, K), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, K), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, G), jnp.float32),
+            pltpu.VMEM(q_scr_shape, x.dtype),
+            pltpu.VMEM((2, sub_b, G, block_m), x.dtype),
+            pltpu.SemaphoreType.DMA((n_mchunks,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qid, gat, cur_idx, cand, qid[:, None], cur_w, cand_valid, x)
+    new_idx, new_d, imp = outs
+    return new_idx[:B], new_d[:B], imp[:B, 0] != 0

@@ -1,0 +1,73 @@
+"""Public jit'd wrapper for the merge-fused neighbour refinement kernel.
+
+Backend selection matches the other kernel packages:
+  'pallas'    -- compiled Pallas kernel (TPU runtime)
+  'interpret' -- Pallas interpret mode (CPU validation of the kernel body)
+  'xla'       -- legacy selection pipeline (dedup_candidates + gather-ref
+                 distances + merge_knn): flipping ``cfg.merge_fused`` is
+                 bit-neutral on this path
+  'auto'      -- 'pallas' when a TPU is present, else 'xla'
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knn_merge.kernel import knn_merge_pallas
+from repro.kernels.knn_merge.ref import knn_merge_ref
+
+
+def _default_backend() -> str:
+    try:
+        platform = jax.devices()[0].platform
+    except Exception:  # pragma: no cover - device init failure
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "xla"
+
+
+def knn_merge(x, qid, cur_idx, cur_d, cand, *, cand_active=None,
+              cur_valid=None, backend: str = "auto"):
+    """Score C candidates, dedup, and top-K merge -- ONE fused operation.
+
+    Replaces the per-iteration selection epilogue ``dedup_candidates`` ->
+    ``pairwise_sqdist_gather`` -> ``merge_knn``: the Pallas path performs
+    the dedup and the (stable, top_k-tie-identical) merge in-register per
+    row block, so no (B, C) distance buffer, no (B, C, K)/(B, C, C) dedup
+    broadcast tensor and no sort exist in the step HLO.
+
+    Args:
+      x: (N, M) source matrix (X for HD refinement, Y for LD).
+      qid: (B,) int32 query row ids.
+      cur_idx: (B, K) int32 resident neighbour list; SENTINEL = invalid.
+      cur_d: (B, K) f32 stored squared distances (+inf = invalid), or
+        ``None`` to re-score the current neighbours in-kernel (LD mode:
+        the embedding moved since the list was merged).  ``None`` requires
+        ``cur_valid``.
+      cand: (B, C) int32 candidate ids (SENTINEL / out-of-range allowed).
+      cand_active: optional (B, C) bool extra validity mask (active-row
+        membership); structural dedup (self / current / earlier-duplicate
+        / SENTINEL) always happens inside.
+      cur_valid: (B, K) bool validity of current slots, rescore mode only.
+    Returns:
+      (new_idx (B, K) int32, new_d (B, K) f32, improved (B,) bool) --
+      the ``merge_knn`` contract: sorted ascending, stable ties,
+      ``improved`` true iff a candidate beat the pre-merge worst slot.
+    """
+    rescore = cur_d is None
+    if rescore:
+        assert cur_valid is not None, "rescore mode requires cur_valid"
+    else:
+        assert cur_valid is None, "cur_valid is a rescore-mode option"
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "xla":
+        return knn_merge_ref(x, qid, cur_idx, cur_d, cand,
+                             cand_active=cand_active, cur_valid=cur_valid)
+    if backend in ("pallas", "interpret"):
+        if cand_active is None:
+            cand_active = jnp.ones(cand.shape, bool)
+        cur_w = cur_valid if rescore else cur_d
+        return knn_merge_pallas(x, qid, cur_idx, cur_w, cand, cand_active,
+                                rescore=rescore,
+                                interpret=(backend == "interpret"))
+    raise ValueError(f"unknown backend {backend!r}")

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _edge_wsum(delta, coef, alpha, mode: str):
     """Closed-form tail powers -> (edge, wsum); the single in-kernel copy
@@ -333,6 +335,11 @@ def ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha, *,
             pltpu.VMEM((2, sub_b, K, d), x.dtype),
             pltpu.SemaphoreType.DMA((2,)),
         ],
+        # one independent row block per grid step: Mosaic may split the
+        # sweep across TensorCores (each core double-buffers its own
+        # scratch slots)
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(qid, nbr_idx, alpha_arr, coef, x)
     aggs = tuple(o[:B] for o in outs[:S])

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _sqdist_kernel(q_ref, c_ref, out_ref):
     """One (block_b, block_m) tile: accumulate partial squared distances."""
@@ -115,22 +117,30 @@ def _round_up(x: int, mult: int) -> int:
 #     still stream per chunk (they are the C-fold bigger term).
 
 
-def _sqdist_gather_kernel(qid_ref, cand_ref, x_ref, out_ref, q_scr, c_scr,
-                          q_sem, c_sem, *, m_size: int, block_m: int,
-                          sub_b: int, persistent_q: bool):
-    """One (block_b, block_m) tile: gather rows by index, then accumulate.
+def score_gather_block(qid_ref, gat_ref, x_ref, acc, q_scr, c_scr, q_sem,
+                       c_sem, *, m_size: int, block_m: int, sub_b: int,
+                       persistent_q: bool):
+    """One (block_b, block_m) grid step of the row-gather scoring pipeline.
+
+    DMAs the q row and the G gathered rows of each block row straight from
+    ``x_ref`` (HBM/ANY) into VMEM staging and accumulates partial squared
+    distances into ``acc`` across the M grid axis.  The single copy of the
+    pipeline shared by ``pairwise_sqdist_gather`` and the merge-fused
+    ``knn_merge`` kernel (which runs its selection epilogue on ``acc``
+    after the final chunk).
 
     qid_ref: (block_b,) SMEM        query row ids
-    cand_ref: (block_b, C) SMEM     candidate row ids
+    gat_ref: (block_b, G) SMEM      gathered (clipped) row ids
     x_ref: (N, M) ANY               source matrix (stays in HBM)
-    out_ref: (block_b, C) VMEM      squared-distance accumulator
+    acc: (block_b, G) VMEM          squared-distance accumulator
+                                    (output block or scratch)
     q_scr: (n_mchunks, block_b, block_m) if persistent_q
            else (2, sub_b, block_m) VMEM staging
-    c_scr: (2, sub_b, C, block_m) VMEM double-buffer staging
+    c_scr: (2, sub_b, G, block_m) VMEM double-buffer staging
     q_sem: (n_mchunks,) / c_sem: (2,) DMA semaphores
     """
     j = pl.program_id(1)
-    block_b, C = out_ref.shape
+    block_b, G = acc.shape
     n_sub = block_b // sub_b
     # Ragged M: clamp each chunk's start so the DMA stays in bounds and
     # mask the columns the previous chunk already covered.
@@ -167,8 +177,8 @@ def _sqdist_gather_kernel(qid_ref, cand_ref, x_ref, out_ref, q_scr, c_scr,
                     x_ref.at[qid_ref[r], pl.ds(m0, block_m)],
                     q_scr.at[slot, lr], c_sem.at[slot]))
             jax.lax.fori_loop(
-                0, C, lambda k, x: (op(pltpu.make_async_copy(
-                    x_ref.at[cand_ref[r, k], pl.ds(m0, block_m)],
+                0, G, lambda k, x: (op(pltpu.make_async_copy(
+                    x_ref.at[gat_ref[r, k], pl.ds(m0, block_m)],
                     c_scr.at[slot, lr, k], c_sem.at[slot])), x)[1], None)
             return _
 
@@ -195,7 +205,7 @@ def _sqdist_gather_kernel(qid_ref, cand_ref, x_ref, out_ref, q_scr, c_scr,
             q = q_scr[j, pl.ds(base, sub_b)].astype(jnp.float32)
         else:
             q = q_scr[slot].astype(jnp.float32)     # (sub_b, block_m)
-        c = c_scr[slot].astype(jnp.float32)         # (sub_b, C, block_m)
+        c = c_scr[slot].astype(jnp.float32)         # (sub_b, G, block_m)
         diff = q[:, None, :] - c
         col = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 2)
         fresh = (m0 + col) >= j * block_m           # not already accumulated
@@ -203,11 +213,11 @@ def _sqdist_gather_kernel(qid_ref, cand_ref, x_ref, out_ref, q_scr, c_scr,
 
         @pl.when(j == 0)
         def _init():
-            out_ref[pl.ds(base, sub_b)] = partial
+            acc[pl.ds(base, sub_b)] = partial
 
         @pl.when(j > 0)
         def _acc():
-            out_ref[pl.ds(base, sub_b)] += partial
+            acc[pl.ds(base, sub_b)] += partial
 
         return _
 
@@ -221,6 +231,36 @@ def _pick_sub_b(block_b: int) -> int:
     if block_b <= 16 or block_b % 8:
         return block_b
     return 8
+
+
+def plan_row_gather(B, M, G, itemsize, *, block_b, block_m, sub_b,
+                    persistent_q):
+    """Tiling plan for the row-gather scoring pipeline (shared with the
+    merge-fused ``knn_merge`` kernel): resolves the block/sub-block sizes
+    against the VMEM staging budget and the persistent-q heuristic.
+
+    Returns (block_b, block_m, sub_b, persistent_q, n_mchunks,
+    q_scr_shape) with ``G`` gathered rows per block row.
+    """
+    block_m = min(block_m, M)
+    block_b = min(block_b, _round_up(B, 8))
+    if sub_b is None:
+        sub_b = _pick_sub_b(block_b)
+    assert block_b % sub_b == 0, (block_b, sub_b)
+    # keep the 2-slot (G+1) row-chunk staging comfortably inside VMEM
+    while block_b > 8 and 2 * min(sub_b, block_b) * (G + 1) * block_m \
+            * itemsize > 8 * 2 ** 20:
+        block_b //= 2
+        # a halved block_b may no longer be a multiple of sub_b: every row
+        # of a block must land in some sub-block, so re-derive a divisor
+        sub_b = math.gcd(sub_b, block_b)
+    n_mchunks = _round_up(M, block_m) // block_m
+    if persistent_q is None:
+        persistent_q = n_mchunks > 1 and n_mchunks * block_b * block_m \
+            * itemsize <= 4 * 2 ** 20
+    q_scr_shape = (n_mchunks, block_b, block_m) if persistent_q \
+        else (2, sub_b, block_m)
+    return block_b, block_m, sub_b, persistent_q, n_mchunks, q_scr_shape
 
 
 @functools.partial(
@@ -256,32 +296,18 @@ def pairwise_sqdist_gather_pallas(
     qid = jnp.clip(qid.astype(jnp.int32), 0, N - 1)
     cand = jnp.clip(cand.astype(jnp.int32), 0, N - 1)
 
-    block_m = min(block_m, M)
-    block_b = min(block_b, _round_up(B, 8))
-    if sub_b is None:
-        sub_b = _pick_sub_b(block_b)
-    assert block_b % sub_b == 0, (block_b, sub_b)
-    # keep the 2-slot (C+1) row-chunk staging comfortably inside VMEM
-    while block_b > 8 and 2 * min(sub_b, block_b) * (C + 1) * block_m \
-            * x.dtype.itemsize > 8 * 2 ** 20:
-        block_b //= 2
-        # a halved block_b may no longer be a multiple of sub_b: every row
-        # of a block must land in some sub-block, so re-derive a divisor
-        sub_b = math.gcd(sub_b, block_b)
-    n_mchunks = _round_up(M, block_m) // block_m
-    if persistent_q is None:
-        persistent_q = n_mchunks > 1 and n_mchunks * block_b * block_m \
-            * x.dtype.itemsize <= 4 * 2 ** 20
+    block_b, block_m, sub_b, persistent_q, n_mchunks, q_scr_shape = \
+        plan_row_gather(B, M, C, x.dtype.itemsize, block_b=block_b,
+                        block_m=block_m, sub_b=sub_b,
+                        persistent_q=persistent_q)
     Bp = _round_up(B, block_b)
     if Bp != B:
         qid = jnp.pad(qid, (0, Bp - B))
         cand = jnp.pad(cand, ((0, Bp - B), (0, 0)))
 
     grid = (Bp // block_b, n_mchunks)
-    q_scr_shape = (n_mchunks, block_b, block_m) if persistent_q \
-        else (2, sub_b, block_m)
     out = pl.pallas_call(
-        functools.partial(_sqdist_gather_kernel, m_size=M, block_m=block_m,
+        functools.partial(score_gather_block, m_size=M, block_m=block_m,
                           sub_b=sub_b, persistent_q=persistent_q),
         grid=grid,
         in_specs=[
@@ -299,6 +325,11 @@ def pairwise_sqdist_gather_pallas(
             pltpu.SemaphoreType.DMA((n_mchunks,)),
             pltpu.SemaphoreType.DMA((2,)),
         ],
+        # row blocks are independent (Mosaic may split them across
+        # TensorCores); the M axis sequentially revisits the same output
+        # block to accumulate partial distances, so it must stay serial
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qid, cand, x)
     return out[:B]

@@ -203,6 +203,47 @@ def test_chunk_metrics_sync_once_per_chunk():
     assert int(m2.step) == 20
 
 
+def test_fit_early_stop_halts_converged_run():
+    """First ChunkMetrics consumer: with lr=0 the embedding cannot move
+    (vel stays 0 -> disp_ema == 0), so fit(early_stop=...) must stop
+    after the first chunk instead of burning the remaining dispatches."""
+    X, _ = blobs(n=64, dim=6, n_centers=2, center_std=5.0, seed=4)
+    cfg = funcsne.FuncSNEConfig(n_points=64, dim_hd=6, backend="xla")
+    hp = funcsne.default_hparams(64)._replace(lr=jnp.float32(0.0))
+    st, _ = funcsne.fit(X, cfg=cfg, n_iter=60, hparams=hp,
+                        schedule=lambda it, n, h: h,   # keep lr pinned at 0
+                        chunk_size=10, early_stop=1e-9)
+    assert int(st.step) == 10, int(st.step)     # stopped after one chunk
+
+
+def test_fit_early_stop_lets_moving_run_finish():
+    """A run that is still moving must never trip an (absurdly small)
+    threshold -- and early_stop=None must not change behaviour at all."""
+    X, _ = blobs(n=64, dim=6, n_centers=2, center_std=5.0, seed=4)
+    cfg = funcsne.FuncSNEConfig(n_points=64, dim_hd=6, backend="xla")
+    st, _ = funcsne.fit(X, cfg=cfg, n_iter=40, chunk_size=10,
+                        early_stop=1e-30)
+    assert int(st.step) == 40, int(st.step)
+    st_none, _ = funcsne.fit(X, cfg=cfg, n_iter=40, chunk_size=10)
+    _assert_states_match(st_none, st, bitwise=True)
+
+
+def test_fit_early_stop_host_loop_fallback():
+    """Host-only schedules (Python control flow on ``it``) route through
+    the per-step host loop; early_stop must work there too via the
+    mirrored displacement EMA."""
+    X, _ = blobs(n=48, dim=5, n_centers=2, center_std=5.0, seed=5)
+    cfg = funcsne.FuncSNEConfig(n_points=48, dim_hd=5, backend="xla")
+    hp = funcsne.default_hparams(48)._replace(lr=jnp.float32(0.0))
+
+    def host_schedule(it, n, h):          # int(it): host loop required
+        return h if int(it) >= 0 else h
+
+    st, _ = funcsne.fit(X, cfg=cfg, n_iter=30, hparams=hp,
+                        schedule=host_schedule, early_stop=1e-9)
+    assert int(st.step) < 30, int(st.step)
+
+
 def test_chunked_trajectory_statistically_equivalent_long_horizon():
     """Over 60 steps the ulp-level codegen differences fork discrete KNN
     choices (see module docstring), so the long-horizon contract is the

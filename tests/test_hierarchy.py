@@ -1,7 +1,8 @@
-"""Hierarchy extraction units: subsampled DBSCAN-eps selection."""
+"""Hierarchy extraction units: subsampled DBSCAN-eps selection + the
+scan-chunked inner optimisation."""
 import numpy as np
 
-from repro.core.hierarchy import select_eps
+from repro.core.hierarchy import extract_hierarchy, select_eps
 
 
 def _snapshot(n=900, seed=0):
@@ -38,3 +39,83 @@ def test_select_eps_collapsed_snapshot():
     than crash on an empty quantile."""
     Y = np.zeros((64, 2), np.float32)
     assert select_eps(Y, 0.02, max_rows=32) == 0.0
+
+
+# --------------------------------------------------------------------------
+# Chunked inner optimisation (funcsne §Perf H15 wiring)
+
+
+def _hierarchy_problem(n=120, dim=8, seed=0, center_std=8.0):
+    from repro.data.synthetic import blobs
+    X, _ = blobs(n=n, dim=dim, n_centers=3, center_std=center_std,
+                 seed=seed)
+    return X
+
+
+def test_extract_hierarchy_chunk_size_invariant():
+    """Chunk boundaries are a dispatch-granularity knob, never a numerics
+    knob (the driver's bit-exact composition contract): any chunk_size
+    must produce the identical cluster graph, labels included."""
+    from repro.core import funcsne
+
+    X = _hierarchy_problem()
+    kw = dict(alphas=(1.0, 0.6), warmup_iters=25, iters_per_level=20,
+              cfg=funcsne.FuncSNEConfig(n_points=120, dim_hd=8, dim_ld=2,
+                                        backend="xla"))
+    g_a = extract_hierarchy(X, chunk_size=7, **kw)
+    g_b = extract_hierarchy(X, chunk_size=50, **kw)
+    assert len(g_a.levels) == len(g_b.levels) == 2
+    for la, lb in zip(g_a.levels, g_b.levels):
+        assert la.n_clusters == lb.n_clusters
+        np.testing.assert_array_equal(la.labels, lb.labels)
+    assert g_a.edges == g_b.edges
+
+
+def test_extract_hierarchy_matches_per_step_host_loop():
+    """Regression vs the path this replaces: the same sweep driven by
+    per-dispatch make_step calls.  Scan vs sequential dispatch agrees to
+    fp32 tolerance over short horizons only (ulp drift forks discrete KNN
+    choices past ~tens of steps -- the test_chunked_driver contract), so
+    this pins a short sweep whose embeddings are tolerance-identical: the
+    PCA init of well-separated blobs is already crisply 3-clustered, and
+    both paths must produce the SAME labels at every level, ragged chunks
+    (6 = 4+2, 5 = 4+1) included."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import funcsne
+    from repro.core.dbscan import dbscan, relabel_compact
+
+    X = _hierarchy_problem(seed=2, center_std=10.0)
+    Xj = jnp.asarray(X)
+    cfg = funcsne.FuncSNEConfig(n_points=120, dim_hd=8, dim_ld=2,
+                                backend="xla")
+    hparams = funcsne.default_hparams(120, perplexity=10.0)
+    alphas, warmup, per_level, quantile = (1.0, 0.8), 6, 5, 0.05
+
+    # the pre-chunking host loop, verbatim
+    st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+    step = funcsne.make_step(cfg)
+    for it in range(warmup):
+        hp = funcsne.default_schedule(
+            it, warmup, hparams._replace(alpha=jnp.float32(alphas[0])))
+        st = step(st, Xj, hp)
+    want_levels = []
+    for alpha in alphas:
+        hp = hparams._replace(alpha=jnp.float32(alpha))
+        for _ in range(per_level):
+            st = step(st, Xj, hp)
+        Y = np.asarray(jax.device_get(st.Y))
+        eps = select_eps(Y, quantile, max_rows=1024, seed=0)
+        labels, k = relabel_compact(dbscan(Y, eps, 5))
+        want_levels.append((k, labels))
+
+    got = extract_hierarchy(X, alphas=alphas, warmup_iters=warmup,
+                            iters_per_level=per_level, cfg=cfg,
+                            hparams=hparams, eps_quantile=quantile,
+                            chunk_size=4)
+    assert len(got.levels) == len(want_levels)
+    assert got.levels[0].n_clusters >= 3       # the blobs, not one glob
+    for lv, (k, labels) in zip(got.levels, want_levels):
+        assert lv.n_clusters == k, (lv.n_clusters, k)
+        np.testing.assert_array_equal(lv.labels, labels)

@@ -116,6 +116,62 @@ def test_ne_forces_gather_double_buffer_sub_blocks(sub_b):
                                        err_msg=f"{name}[{s}]@sub_b={sub_b}")
 
 
+def test_dimension_semantics_annotated_kernels_parity():
+    """The gather kernels carry grid ``dimension_semantics`` annotations
+    ('parallel' row blocks, 'arbitrary' accumulation axes) for real-TPU
+    tuning.  The annotation must be a pure scheduling hint: interpret-
+    mode parity with the refs on multi-block grids (several row blocks
+    AND several M chunks, so both axes actually iterate) pins that, and
+    pins that the compat shim (TPUCompilerParams vs CompilerParams)
+    resolves on this jax version."""
+    from repro.compat import tpu_compiler_params
+
+    params = tpu_compiler_params(dimension_semantics=("parallel",))
+    assert params is not None
+
+    rng = np.random.default_rng(31)
+    n, m, b, c = 60, 200, 53, 5            # 4 ragged M chunks at bm=64
+    x = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    qid = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    cand = jnp.asarray(rng.integers(-2, n + 3, (b, c)).astype(np.int32))
+    got = pairwise_sqdist_gather_pallas(x, qid, cand, block_b=16,
+                                        block_m=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(pairwise_sqdist_gather_ref(
+                                   x, qid, cand)),
+                               rtol=1e-5, atol=1e-4)
+
+    d = 3
+    segments = (("attraction", 4), ("repulsion", 3))
+    y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    nbr = jnp.asarray(rng.integers(-1, n + 2, (b, 7)).astype(np.int32))
+    coef = jnp.asarray(rng.random((b, 7)).astype(np.float32))
+    got = ne_forces_gather_pallas(y, qid, nbr, coef, 1.1, segments=segments,
+                                  block_b=16, interpret=True)
+    want = ne_forces_gather_ref(y, qid, nbr, coef, 1.1, segments=segments)
+    for gs, ws in zip(got, want):
+        for g, w in zip(gs, ws):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-5, atol=2e-5)
+
+    from repro.kernels.knn_merge.kernel import knn_merge_pallas
+    from repro.kernels.knn_merge.ref import knn_merge_ref
+    xq = jnp.asarray((rng.integers(-8, 9, (n, m)) / 4.0).astype(np.float32))
+    k = 6
+    cur_idx = jnp.asarray(rng.integers(0, n, (b, k)).astype(np.int32))
+    d0 = jnp.sort(jnp.sum((xq[cur_idx] - xq[qid][:, None, :]) ** 2, -1), 1)
+    order = jnp.argsort(jnp.sum((xq[cur_idx] - xq[qid][:, None, :]) ** 2,
+                                -1), 1)
+    cur_idx = jnp.take_along_axis(cur_idx, order, 1)
+    active = jnp.ones((b, c), bool)
+    got = knn_merge_pallas(xq, qid, cur_idx, d0, cand, active,
+                           rescore=False, block_b=16, block_m=64,
+                           interpret=True)
+    want = knn_merge_ref(xq, qid, cur_idx, d0, cand, cand_active=active)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 def test_pairwise_sqdist_gather_matches_pregather():
     """Same answer as the pre-gather kernel fed the explicit X[cand]."""
     rng = np.random.default_rng(7)
