@@ -38,7 +38,9 @@ import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.funcsne import FuncSNEConfig
-from repro.core.knn import dedup_candidates, merge_knn
+from repro.core.knn import (counter_candidates, dedup_candidates, key_salt,
+                            merge_knn, sample_direct, sample_hops,
+                            sample_uniform)
 from repro.kernels.knn_merge.ref import knn_merge_ref, knn_merge_rank_ref
 from repro.kernels.ne_forces.ref import (ne_forces_gather_ref, ne_forces_ref,
                                          ne_forces_scatter_ref)
@@ -245,6 +247,55 @@ def run(ns=(2048, 16384), m=192, repeats=10):
         ratio = us_topk / max(us_rank, 1e-9)
         rows.append(row(f"kbench_select_xla_ratio_n{n}", ratio,
                         f"topk_us/merge_us={ratio:.3f} (ratio, not us)"))
+
+        # ---- candidate generation: legacy threefry sampler vs the
+        # counter-hash sampler (§Perf H17).  The A side is _hd_refine's
+        # legacy stack (fold/split + sample_hops' (n, s, K2) two-hop
+        # gather broadcasts); the B side is the jnp reference of the
+        # in-kernel generator (identical draws to the kernel, flat
+        # gathers, zero threefry).
+        hd_tab = jnp.asarray(rng.integers(0, n, (n, k_hd))
+                             .astype(np.int32))
+        ld_tab = jnp.asarray(rng.integers(0, n, (n, k_ld))
+                             .astype(np.int32))
+        key = jax.random.PRNGKey(0)
+        sources = (("two_hop", 0, 0, _DEFAULTS.c_hd_non),
+                   ("one_hop", 1, _DEFAULTS.c_hd_ld),
+                   ("two_hop", 1, 1, _DEFAULTS.c_hd_ld_non),
+                   ("uniform", _DEFAULTS.c_hd_rand))
+
+        def cand_xla(key, hd_tab, ld_tab):
+            r = jax.random.split(jax.random.fold_in(key, 7), 4)
+            return jnp.concatenate([
+                sample_hops(r[0], hd_tab, hd_tab, qid,
+                            _DEFAULTS.c_hd_non),
+                sample_direct(r[1], ld_tab, _DEFAULTS.c_hd_ld),
+                sample_hops(r[2], ld_tab, ld_tab, qid,
+                            _DEFAULTS.c_hd_ld_non),
+                sample_uniform(r[3], n, n, _DEFAULTS.c_hd_rand)], axis=1)
+
+        def cand_fused(key, hd_tab, ld_tab):
+            return counter_candidates(key_salt(key), qid, sources,
+                                      (hd_tab, ld_tab), (hd_tab, ld_tab),
+                                      n_total=n)
+
+        us_xla, us_fus = _bench_pair(cand_xla, cand_fused, key, hd_tab,
+                                     ld_tab, repeats=n_reps)
+        # TPU HBM model for the generation phase alone: the legacy path
+        # materialises the two (n, s, K2) two-hop broadcasts and
+        # round-trips the (n, C) candidate tensor the kernel re-reads;
+        # in-kernel generation fetches one chained int32 element per
+        # two-hop slot and writes nothing.
+        s2 = _DEFAULTS.c_hd_non * k_hd + _DEFAULTS.c_hd_ld_non * k_ld
+        b_xla = 4.0 * n * s2 + 2.0 * 4.0 * n * C
+        b_fus = 4.0 * n * (_DEFAULTS.c_hd_non + _DEFAULTS.c_hd_ld_non)
+        rows.append(row(f"kbench_cand_xla_n{n}", us_xla,
+                        f"modeled_tpu_hbm={_mb(b_xla)};threefry=1"))
+        rows.append(row(f"kbench_cand_fused_n{n}", us_fus,
+                        f"modeled_tpu_hbm={_mb(b_fus)};threefry=0"))
+        ratio = us_xla / max(us_fus, 1e-9)
+        rows.append(row(f"kbench_cand_xla_ratio_n{n}", ratio,
+                        f"xla_us/fused_us={ratio:.3f} (ratio, not us)"))
     return rows
 
 
@@ -349,6 +400,39 @@ def smoke_kernel_launches():
                      cur_valid=cur_valid),
        "knn_merge_rescore")
     yield row("ksmoke_launch_knn_merge_rescore", dt * 1e6, "interpret-mode")
+
+    # candidate-fused generation (§Perf H17): the kernel derives the
+    # candidates it scores (counter hash + chained two-hop element DMAs
+    # through the second-table channel); parity vs the jnp reference
+    # sampler is discrete-exact on the quantised coordinates
+    from repro.kernels.knn_merge.kernel import knn_merge_cand_pallas
+    from repro.kernels.knn_merge.ref import knn_merge_cand_ref
+
+    oth = jnp.asarray(rng.integers(0, n, (b, 4)).astype(np.int32))
+    sec = jnp.asarray(rng.integers(0, n, (n, 5)).astype(np.int32))
+    act_rows = jnp.asarray(rng.random(n) >= 0.1)
+    salt = jnp.int32(5)
+    sources = (("two_hop", 0, 0, 2), ("one_hop", 1, 1), ("uniform", 2))
+
+    def launch_cand(rescore):
+        cw = cur_valid if rescore else cur_d
+        return knn_merge_cand_pallas(
+            Xq, qid, cur_idx, cw, salt, (cur_idx, oth), (sec,), None,
+            act_rows, sources=sources, rescore=rescore, block_b=16,
+            block_m=8, interpret=True)
+
+    for rescore, tag in ((False, "cand_fused"), (True,
+                                                 "cand_fused_rescore")):
+        _, dt = timed(lambda: jax.block_until_ready(launch_cand(rescore)))
+        eq(launch_cand(rescore),
+           knn_merge_cand_ref(Xq, qid, cur_idx,
+                              None if rescore else cur_d, salt=salt,
+                              sources=sources,
+                              first_tables=(cur_idx, oth),
+                              second_tables=(sec,), active=act_rows,
+                              cur_valid=cur_valid if rescore else None),
+           tag)
+        yield row(f"ksmoke_launch_{tag}", dt * 1e6, "interpret-mode")
 
 
 def main() -> None:

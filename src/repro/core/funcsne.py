@@ -46,6 +46,24 @@ Config flag matrix (orthogonal, all combinations tested):
                      back under feature-axis sharding); False: XLA
                      ``dedup_candidates`` + ``merge_knn`` epilogue
                      (bit-equivalence anchor on the 'xla' backend).
+  ``cand_fused``     True: every per-step random draw comes from the
+                     counter-based hash RNG (§H17) -- the HD/LD
+                     candidates are *generated inside* the merge kernel
+                     (chained two-hop gathers through the second-table
+                     channel) when ``merge_fused`` + ``gather_fused``
+                     supply that kernel, and by the bit-identical
+                     pure-jnp reference sampler otherwise (the 'xla'
+                     backend, ``merge_fused=False``, or the HD
+                     feature-sharding fallback); the refinement gate and
+                     the negative samples use the same counter RNG, so
+                     the step HLO carries NO threefry/random-bits ops
+                     and no (n, s, K2) two-hop gather broadcast.
+                     False: the legacy ``jax.random`` (threefry)
+                     sampler.  NB flipping this flag changes the random
+                     stream, so trajectories differ statistically (not
+                     bitwise) from the legacy path; within
+                     ``cand_fused=True`` all backend / fused-flag
+                     combinations keep their usual parity contracts.
   ``backend``        'auto' (pallas on TPU else xla) | 'pallas' |
                      'interpret' | 'xla'.  The scatter kernel's VMEM
                      plan (ne_forces/ops.py: ~10MB budget, N-chunked
@@ -97,6 +115,21 @@ are psum'd -- tensor parallelism for the NE.  Passing ``ctx=AxisCtx()``
         (chunk(a) then chunk(b) == chunk(a+b)); a handful of
         ``optimization_barrier``\\ s pin scalar EMA/schedule rounding so
         the traced chunk tracks the eager host loop it replaced.
+  H17   candidate-fused sampling: candidate generation was the last
+        per-iteration phase running as plain XLA -- ``sample_hops``
+        materialised an (n, s, K2) two-hop gather broadcast in HBM, the
+        threefry split/randint chain re-ran every step, and the (n, C)
+        candidate tensor round-tripped HBM just to be re-read by the
+        merge kernel's SMEM slabs.  With ``cand_fused=True`` the
+        candidate slots are derived *inside* the kernel from state it
+        already stages: a counter-based hash RNG keyed on (step salt,
+        global row, slot) -- splittable and order/shard-invariant, with
+        a bit-exact pure-jnp reference in ``core/knn.py`` -- plus
+        chained element DMAs through the neighbour tables for the
+        two-hop sources.  The refinement gate and the negatives draw
+        from the same counter stream, so no threefry survives anywhere
+        in the step HLO.  Cached reverse edges (``rev_refresh``) ride in
+        as precomputed "extra" slots.
   H16   merge-fused neighbour selection: after the gather kernel has the
         candidate distances in VMEM, the dedup (self / current-list /
         earlier-candidate / SENTINEL) and the sorted top-K insertion run
@@ -174,6 +207,19 @@ class FuncSNEConfig:
     # phase falls back automatically under feature-axis sharding (the
     # merge needs the psum'd full distances).
     merge_fused: bool = True
+    # candidate-fused sampling (§Perf H17): every per-step draw (HD/LD
+    # candidates, refinement gate, negatives, reverse-edge fill) comes
+    # from the counter-based hash RNG; candidates are generated inside
+    # the merge kernel where merge_fused+gather_fused supply it, and by
+    # the bit-identical jnp reference sampler otherwise.  False keeps the
+    # legacy jax.random (threefry) sampler -- a different random stream,
+    # so the flag is a statistical (not bitwise) A/B.
+    cand_fused: bool = True
+    # refresh cadence of the cached reverse-edge table (used when
+    # c_hd_rev > 0): the n*K-edge argsort rebuild runs every rev_refresh
+    # steps instead of at every HD refinement; 1 == the legacy
+    # rebuild-per-refinement behaviour, bit-for-bit.
+    rev_refresh: int = 10
 
     @property
     def c_hd(self) -> int:
@@ -233,6 +279,17 @@ class FuncSNEState(NamedTuple):
     zhat: Any       # () f32 EMA'd Z estimator
     step: Any       # () i32
     rng: Any        # PRNG key
+    rev_idx: Any = ()   # (N, c_hd_rev) cached reverse edges ((N, 0) when
+    #                     unused; refreshed every cfg.rev_refresh steps)
+    rev_step: Any = ()  # () i32 step of the last reverse-edge refresh
+    #                     (refinement runs behind a stochastic gate, so
+    #                     cadence is since-last-refresh, not step % k --
+    #                     a gate-skipped refresh step must not be lost)
+
+
+# Counter-RNG stream tags (§Perf H17): per-step salts are
+# hash3(key_salt(st.rng), st.step, TAG), one disjoint stream per phase.
+_TAG_GATE, _TAG_HD, _TAG_LD, _TAG_NEG, _TAG_REV = 1, 2, 3, 4, 5
 
 
 # --------------------------------------------------------------------------
@@ -282,6 +339,26 @@ def _row_sqdist(X, ids, cand, ctx: AxisCtx, cfg: "FuncSNEConfig"):
 # Phase 1: HD neighbour refinement
 
 
+def _rev_update(cfg: FuncSNEConfig, st: FuncSNEState, fill):
+    """Refresh the cached reverse-edge table once ``cfg.rev_refresh``
+    steps have passed since the last rebuild: the argsort over all n*K
+    directed edges leaves the per-iteration path.  The cadence is
+    *since-last-refresh* (``st.rev_step``), not ``step % k``: refinement
+    itself runs behind a stochastic gate, so an absolute-modulo schedule
+    would silently drop every refresh whose step the gate skipped and
+    leave staleness unbounded.  ``rev_refresh=1`` == the legacy
+    per-refinement rebuild, bit-for-bit -- any later refinement
+    satisfies the >= 1 condition, the same ``fill`` protocol feeds
+    ``reverse_neighbors``, and the cache is overwritten before use."""
+    n = cfg.n_points
+    rev, rstep = jax.lax.cond(
+        st.step - st.rev_step >= cfg.rev_refresh,
+        lambda: (knn_lib.reverse_neighbors(st.hd_idx, n, cfg.c_hd_rev,
+                                           fill=fill), st.step),
+        lambda: (st.rev_idx, st.rev_step))
+    return st._replace(rev_idx=rev, rev_step=rstep)
+
+
 def _hd_refine(cfg: FuncSNEConfig, st: FuncSNEState, X, rng, ctx: AxisCtx):
     n = cfg.n_points
     start, n_loc = _phase_rows(n, ctx.points)
@@ -290,34 +367,77 @@ def _hd_refine(cfg: FuncSNEConfig, st: FuncSNEState, X, rng, ctx: AxisCtx):
     hd_d_l = jax.lax.dynamic_slice_in_dim(st.hd_d, start, n_loc)
     ld_l = jax.lax.dynamic_slice_in_dim(st.ld_idx, start, n_loc)
 
-    if ctx.points is not None:
-        rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.points))
-    r = jax.random.split(rng, 5)
-    parts = []
-    if cfg.c_hd_non:
-        parts.append(knn_lib.sample_hops(r[0], hd_l, st.hd_idx, ids,
-                                         cfg.c_hd_non))
-    if cfg.c_hd_ld:
-        parts.append(knn_lib.sample_direct(r[1], ld_l, cfg.c_hd_ld))
-    if cfg.c_hd_ld_non:
-        parts.append(knn_lib.sample_hops(r[2], ld_l, st.ld_idx, ids,
-                                         cfg.c_hd_ld_non))
-    if cfg.c_hd_rand:
-        parts.append(knn_lib.sample_uniform(r[3], n_loc, n, cfg.c_hd_rand))
-    if cfg.c_hd_rev:
-        rev = knn_lib.reverse_neighbors(st.hd_idx, n, cfg.c_hd_rev, r[4])
-        parts.append(jax.lax.dynamic_slice_in_dim(rev, start, n_loc))
-    cand = jnp.concatenate(parts, axis=1)
+    # §Perf H16 (and the feature-sharding fallback): the in-kernel merge
+    # is available off the feat axis only -- it needs full distances.
+    use_kernel = cfg.merge_fused and cfg.gather_fused and ctx.feat is None
+    cand = rev_l = None
+    fused_kw = {}
+    if cfg.cand_fused:
+        # §Perf H17: all draws from the counter RNG, keyed on *global*
+        # row ids -- no per-shard fold needed, the stream is
+        # shard-invariant by construction.
+        base = knn_lib.as_salt(rng)
+        salt = knn_lib.hash3(base, st.step, _TAG_HD)
+        if cfg.c_hd_rev:
+            fill = knn_lib.counter_fill(
+                knn_lib.hash3(base, st.step, _TAG_REV), n, cfg.c_hd_rev)
+            st = _rev_update(cfg, st, fill)
+            rev_l = jax.lax.dynamic_slice_in_dim(st.rev_idx, start, n_loc)
+        sources = (("two_hop", 0, 0, cfg.c_hd_non),
+                   ("one_hop", 1, cfg.c_hd_ld),
+                   ("two_hop", 1, 1, cfg.c_hd_ld_non),
+                   ("uniform", cfg.c_hd_rand),
+                   ("extra", cfg.c_hd_rev))
+        firsts, seconds = (hd_l, ld_l), (st.hd_idx, st.ld_idx)
+        if use_kernel:
+            fused_kw = dict(sources=sources, salt=salt,
+                            first_tables=firsts, second_tables=seconds,
+                            active=st.active)
+        else:
+            cand = knn_lib.counter_candidates(salt, ids, sources, firsts,
+                                              seconds, n_total=n,
+                                              extra=rev_l)
+    else:
+        rng0 = rng
+        if ctx.points is not None:
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.points))
+        r = jax.random.split(rng, 5)
+        parts = []
+        if cfg.c_hd_non:
+            parts.append(knn_lib.sample_hops(r[0], hd_l, st.hd_idx, ids,
+                                             cfg.c_hd_non))
+        if cfg.c_hd_ld:
+            parts.append(knn_lib.sample_direct(r[1], ld_l, cfg.c_hd_ld))
+        if cfg.c_hd_ld_non:
+            parts.append(knn_lib.sample_hops(r[2], ld_l, st.ld_idx, ids,
+                                             cfg.c_hd_ld_non))
+        if cfg.c_hd_rand:
+            parts.append(knn_lib.sample_uniform(r[3], n_loc, n,
+                                                cfg.c_hd_rand))
+        if cfg.c_hd_rev:
+            # the cached table is carried in *replicated* state, so its
+            # fill must be identical on every shard: on a mesh derive it
+            # from the pre-fold key (single-device: r[4], the legacy key)
+            fill_key = r[4] if ctx.points is None \
+                else jax.random.split(rng0, 5)[4]
+            st = _rev_update(cfg, st,
+                             knn_lib.sample_uniform(fill_key, n, n,
+                                                    cfg.c_hd_rev))
+            parts.append(jax.lax.dynamic_slice_in_dim(st.rev_idx, start,
+                                                      n_loc))
+        cand = jnp.concatenate(parts, axis=1)
 
-    if cfg.merge_fused and cfg.gather_fused and ctx.feat is None:
-        # §Perf H16: dedup + top-K merge run inside the gather kernel --
-        # no (n, C) distance round-trip, no (n, C, K)/(n, C, C) dedup
-        # broadcast tensors, no top_k in the step HLO.  (Feature-axis
-        # sharding keeps the legacy path: the merge needs the psum'd
-        # full distances.)
+    if use_kernel:
+        # §Perf H16 + H17: dedup + top-K merge run inside the gather
+        # kernel -- no (n, C) distance round-trip, no (n, C, K)/(n, C, C)
+        # dedup broadcast tensors, no top_k in the step HLO; with
+        # cand_fused the candidates themselves are generated in-kernel
+        # (counter RNG + chained two-hop DMAs), so the (n, C) candidate
+        # tensor and the threefry chain vanish too.
         new_idx, new_d, improved = knn_merge(
-            X, ids, hd_l, hd_d_l, cand,
-            cand_active=_take(st.active, cand), backend=cfg.backend)
+            X, ids, hd_l, hd_d_l, rev_l if cfg.cand_fused else cand,
+            cand_active=None if cfg.cand_fused else _take(st.active, cand),
+            backend=cfg.backend, **fused_kw)
     else:
         valid = knn_lib.dedup_candidates(ids, hd_l, cand)
         valid &= _take(st.active, cand)
@@ -375,30 +495,51 @@ def _ld_refine(cfg: FuncSNEConfig, st: FuncSNEState, rng, ctx: AxisCtx):
     ld_l = jax.lax.dynamic_slice_in_dim(st.ld_idx, start, n_loc)
     hd_l = jax.lax.dynamic_slice_in_dim(st.hd_idx, start, n_loc)
 
-    if ctx.all_rows is not None:
-        rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.all_rows))
-    r = jax.random.split(rng, 3)
-    parts = []
-    if cfg.c_ld_non:
-        parts.append(knn_lib.sample_hops(r[0], ld_l, st.ld_idx, ids,
-                                         cfg.c_ld_non))
-    if cfg.c_ld_hd:
-        # HD neighbours: stable LD candidates unaffected by embedding motion
-        parts.append(knn_lib.sample_direct(r[1], hd_l, cfg.c_ld_hd))
-    if cfg.c_ld_rand:
-        parts.append(knn_lib.sample_uniform(r[2], n_loc, n, cfg.c_ld_rand))
-    cand = jnp.concatenate(parts, axis=1)
+    use_kernel = cfg.merge_fused and cfg.gather_fused
+    cand = None
+    fused_kw = {}
+    if cfg.cand_fused:
+        # §Perf H17: counter-RNG draws keyed on global row ids
+        salt = knn_lib.hash3(knn_lib.as_salt(rng), st.step, _TAG_LD)
+        sources = (("two_hop", 0, 0, cfg.c_ld_non),
+                   ("one_hop", 1, cfg.c_ld_hd),
+                   ("uniform", cfg.c_ld_rand))
+        firsts, seconds = (ld_l, hd_l), (st.ld_idx,)
+        if use_kernel:
+            fused_kw = dict(sources=sources, salt=salt,
+                            first_tables=firsts, second_tables=seconds,
+                            active=st.active)
+        else:
+            cand = knn_lib.counter_candidates(salt, ids, sources, firsts,
+                                              seconds, n_total=n)
+    else:
+        if ctx.all_rows is not None:
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.all_rows))
+        r = jax.random.split(rng, 3)
+        parts = []
+        if cfg.c_ld_non:
+            parts.append(knn_lib.sample_hops(r[0], ld_l, st.ld_idx, ids,
+                                             cfg.c_ld_non))
+        if cfg.c_ld_hd:
+            # HD neighbours: stable LD candidates unaffected by embedding
+            # motion
+            parts.append(knn_lib.sample_direct(r[1], hd_l, cfg.c_ld_hd))
+        if cfg.c_ld_rand:
+            parts.append(knn_lib.sample_uniform(r[2], n_loc, n,
+                                                cfg.c_ld_rand))
+        cand = jnp.concatenate(parts, axis=1)
 
-    if cfg.merge_fused and cfg.gather_fused:
-        # §Perf H16: one launch gathers + re-scores current AND candidate
-        # rows (the embedding moved since the last merge), dedups and
-        # merges in-register -- the whole LD selection epilogue is gone
-        # from the step HLO.
+    if use_kernel:
+        # §Perf H16 (+H17): one launch generates (cand_fused) or stages
+        # the candidates, gathers + re-scores current AND candidate rows
+        # (the embedding moved since the last merge), dedups and merges
+        # in-register -- the whole LD selection epilogue is gone from the
+        # step HLO.
         cur_valid = (ld_l != SENTINEL) & _take(st.active, ld_l)
         new_idx, new_d, _ = knn_merge(
             st.Y, ids, ld_l, None, cand,
-            cand_active=_take(st.active, cand), cur_valid=cur_valid,
-            backend=cfg.backend)
+            cand_active=None if cfg.cand_fused else _take(st.active, cand),
+            cur_valid=cur_valid, backend=cfg.backend, **fused_kw)
     else:
         valid = knn_lib.dedup_candidates(ids, ld_l, cand)
         valid &= _take(st.active, cand)
@@ -443,7 +584,8 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
     n, d = cfg.n_points, cfg.dim_ld
     start, n_loc = _phase_rows(n, ctx.all_rows)
     ids = start + jnp.arange(n_loc, dtype=jnp.int32)
-    if ctx.all_rows is not None:
+    if ctx.all_rows is not None and not cfg.cand_fused:
+        # counter-RNG draws are keyed on global row ids -> shard-invariant
         rng = jax.random.fold_in(rng, jax.lax.axis_index(ctx.all_rows))
 
     hd_i = jax.lax.dynamic_slice_in_dim(st.hd_idx, start, n_loc)
@@ -470,7 +612,14 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
     # the momentum-conservation tests, where every edge is symmetrised.
     have_neg = cfg.n_negatives > 0
     if have_neg:
-        neg = knn_lib.sample_uniform(rng, n_loc, n, cfg.n_negatives)
+        if cfg.cand_fused:
+            # §Perf H17: counter-RNG negatives -- no threefry in the HLO
+            salt = knn_lib.hash3(knn_lib.as_salt(rng), st.step,
+                                 _TAG_NEG)
+            draws = jnp.arange(cfg.n_negatives, dtype=jnp.int32)[None, :]
+            neg = knn_lib.counter_randint(salt, ids[:, None], draws, n)
+        else:
+            neg = knn_lib.sample_uniform(rng, n_loc, n, cfg.n_negatives)
         neg = jnp.where(neg == ids[:, None], (neg + 1) % n, neg)
         coef_n = (_take(st.active, neg) & act_l[:, None]).astype(jnp.float32)
         scale_neg = jnp.maximum(n_act - 1.0 - cfg.k_ld, 1.0) / cfg.n_negatives
@@ -598,13 +747,23 @@ def _forces_update(cfg: FuncSNEConfig, st: FuncSNEState, hp: HParams, rng,
 def funcsne_step(cfg: FuncSNEConfig, st: FuncSNEState, X, hp: HParams,
                  ctx: AxisCtx = AxisCtx()) -> FuncSNEState:
     """One fused FUnc-SNE iteration (see module docstring)."""
-    rng = jax.random.fold_in(st.rng, st.step)
-    r_gate, r_hd, r_ld, r_force = jax.random.split(rng, 4)
-
     # stochastic HD refinement: p = 0.05 + 0.95 E[N_new/N]  (paper Sec. 3)
     p_ref = cfg.min_refresh_prob + (1.0 - cfg.min_refresh_prob) \
         * st.ema_new_frac
-    do_hd = jax.random.bernoulli(r_gate, jnp.clip(p_ref, 0.0, 1.0))
+    if cfg.cand_fused:
+        # §Perf H17: the state key is only *read* (its raw bits fold into
+        # one int32 base salt), every draw this step -- gate, candidates,
+        # negatives, reverse-edge fill -- is a counter hash of
+        # (salt, step, tag, row, slot): zero threefry ops in the HLO.
+        base = knn_lib.key_salt(st.rng)
+        r_hd = r_ld = r_force = base
+        u = knn_lib.counter_uniform01(
+            knn_lib.hash3(base, st.step, _TAG_GATE))
+        do_hd = u < jnp.clip(p_ref, 0.0, 1.0)
+    else:
+        rng = jax.random.fold_in(st.rng, st.step)
+        r_gate, r_hd, r_ld, r_force = jax.random.split(rng, 4)
+        do_hd = jax.random.bernoulli(r_gate, jnp.clip(p_ref, 0.0, 1.0))
     st = jax.lax.cond(do_hd,
                       lambda s: _hd_refine(cfg, s, X, r_hd, ctx),
                       lambda s: s, st)
@@ -682,7 +841,11 @@ def init_state(rng, X, cfg: FuncSNEConfig, *, init: str = "pca",
         ld_idx=ld_idx.astype(jnp.int32), ld_d=ld_d,
         beta=beta, new_flag=jnp.ones((n,), bool), active=active,
         ema_new_frac=jnp.float32(1.0), zhat=jnp.float32(1.0),
-        step=jnp.int32(0), rng=r_state)
+        step=jnp.int32(0), rng=r_state,
+        # reverse-edge cache: rev_step starts one full period in the
+        # past so the first refinement always refreshes
+        rev_idx=jnp.zeros((n, cfg.c_hd_rev), jnp.int32),
+        rev_step=jnp.int32(-cfg.rev_refresh))
 
 
 def make_step(cfg: FuncSNEConfig):
@@ -849,7 +1012,8 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         schedule: Callable[[int, int, HParams], HParams] = None,
         init: str = "pca", snapshot_every: int = 0,
         callback: Callable[[int, FuncSNEState], None] = None,
-        chunk_size: int = None, early_stop: float = None):
+        chunk_size: int = None, early_stop: float = None,
+        auto_rescale: float = None):
     """End-to-end driver on the scan-chunked step. Returns (state, snapshots).
 
     ``chunk_size`` iterations run per device dispatch (§Perf H15); the host
@@ -875,6 +1039,16 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
     host-loop fallback evaluates the identical T=1-chunk formula
     (``0.1 * act_disp`` per step), matching ``chunk_size=1`` exactly.
 
+    ``auto_rescale`` (off by default) is the second ChunkMetrics
+    consumer -- the paper's 'implosion button' driven by telemetry: when
+    ``metrics.disp_ema`` collapses below the threshold while iterations
+    remain, the embedding has grown so large that gradient steps no
+    longer move points relative to its scale, so the driver applies
+    :func:`rescale_embedding` (shrink Y by 100x, zero the velocity) and
+    keeps optimising instead of silently freezing.  The same EMA
+    calibration note as ``early_stop`` applies.  When both are set,
+    ``early_stop`` is checked first (a stop wins over a rescale).
+
     A ``schedule`` is evaluated with a *traced* ``it`` inside the chunk;
     one that needs a Python ``int`` (host control flow on ``it``) is
     detected up front and falls back to the per-step host loop.
@@ -895,7 +1069,8 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
                        jax.ShapeDtypeStruct((), jnp.int32))
     except jax.errors.ConcretizationTypeError:
         return _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
-                              snapshot_every, callback, early_stop)
+                              snapshot_every, callback, early_stop,
+                              auto_rescale)
     st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
     snapshots = []
     chunks = {}         # T -> compiled program (final ragged chunk reuses it)
@@ -916,11 +1091,18 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         it += T
         if early_stop is not None and float(metrics.disp_ema) < early_stop:
             break
+        if auto_rescale is not None and it < n_iter \
+                and float(metrics.disp_ema) < auto_rescale:
+            # the paper's implosion button, driven by telemetry: the
+            # layout froze relative to its own scale -- shrink it so
+            # gradients matter again and keep going
+            st = rescale_embedding(st)
     return st, snapshots
 
 
 def _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
-                   snapshot_every, callback, early_stop=None):
+                   snapshot_every, callback, early_stop=None,
+                   auto_rescale=None):
     """Pre-H15 per-step host loop: kept for schedules that must see a
     Python ``it`` (``fit`` detects those and routes here)."""
     st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
@@ -932,7 +1114,7 @@ def _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
             snapshots.append(jax.device_get(st.Y))
         if callback is not None:
             callback(it, st)
-        if early_stop is not None:
+        if early_stop is not None or auto_rescale is not None:
             # exactly the chunk body's ChunkMetrics.disp_ema at T=1: the
             # per-chunk EMA restarts from 0, so one step reads 0.1x the
             # step displacement -- this loop IS the chunk_size=1 case
@@ -940,8 +1122,11 @@ def _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
             act_disp = float(jnp.sum(
                 jnp.abs(st.vel) * st.active[:, None].astype(jnp.float32))) \
                 / (n_act * cfg.dim_ld)
-            if 0.1 * act_disp < early_stop:
+            if early_stop is not None and 0.1 * act_disp < early_stop:
                 break
+            if auto_rescale is not None and it + 1 < n_iter \
+                    and 0.1 * act_disp < auto_rescale:
+                st = rescale_embedding(st)
     return st, snapshots
 
 

@@ -22,8 +22,163 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SENTINEL = jnp.iinfo(jnp.int32).max  # invalid-slot index marker
+
+
+# --------------------------------------------------------------------------
+# Counter-based hash RNG (§Perf H17: candidate-fused sampling)
+#
+# A splittable, order-invariant uniform generator: every draw is a pure
+# int32 hash of ``(salt, row, draw)`` -- no carried PRNG state, no
+# threefry chain in the step HLO, and the exact same arithmetic runs
+# vectorised in jnp (the reference sampler below) and as scalar ops
+# inside the Pallas gather kernel, so kernel-vs-ref parity is bit-exact.
+# The mixer is the 'lowbias32' xorshift-multiply finalizer (Wellons'
+# hash-prospector output); constants are pre-wrapped into int32 so
+# multiplication relies only on two's-complement wraparound, which jnp,
+# XLA and Mosaic all share.
+
+_MIX1 = np.int32(np.uint32(0x21f0aaad))
+_MIX2 = np.int32(np.uint32(0xd35a2d97))
+_KEY_ROW = np.int32(np.uint32(0x85ebca6b))
+_KEY_DRAW = np.int32(np.uint32(0xc2b2ae35))
+_POS_MASK = np.int32(0x7fffffff)
+
+
+def hash_mix(h):
+    """lowbias32 finalizer on int32 bits (wrapping multiply semantics)."""
+    h = h ^ jax.lax.shift_right_logical(h, 16)
+    h = h * _MIX1
+    h = h ^ jax.lax.shift_right_logical(h, 15)
+    h = h * _MIX2
+    h = h ^ jax.lax.shift_right_logical(h, 15)
+    return h
+
+
+def hash3(salt, row, draw):
+    """Counter hash of ``(salt, row, draw)`` -> int32 uniform bits.
+
+    All inputs are int32 scalars/arrays (broadcasting); two mix rounds so
+    row and draw each pass through a full-avalanche finalizer.  Inputs
+    are coerced to int32 so Python-int keys take the same wrapping
+    multiply path as traced values (no eager-numpy overflow).
+    """
+    row = jnp.asarray(row, jnp.int32)
+    draw = jnp.asarray(draw, jnp.int32)
+    h = hash_mix(jnp.asarray(salt, jnp.int32) ^ (row * _KEY_ROW))
+    return hash_mix(h ^ (draw * _KEY_DRAW))
+
+
+def counter_randint(salt, row, draw, bound):
+    """Uniform int32 in [0, bound) from the counter hash (31-bit mod)."""
+    return (hash3(salt, row, draw) & _POS_MASK) % bound
+
+
+def counter_uniform01(h):
+    """int32 hash bits -> f32 uniform in [0, 1) (top 24 bits, exact)."""
+    bits = jax.lax.shift_right_logical(h, 8)
+    return bits.astype(jnp.float32) * np.float32(1.0 / (1 << 24))
+
+
+def key_salt(rng):
+    """Fold a PRNG key's raw bits into one int32 salt (no threefry ops).
+
+    The key is only *read* (``jax.random.key_data``), never advanced, so
+    deriving per-step salts from the carried state key adds zero random-op
+    HLO to the step.
+    """
+    data = jax.lax.bitcast_convert_type(
+        jax.random.key_data(rng).reshape(-1), jnp.int32)
+    salt = jnp.int32(0)
+    for i in range(data.shape[0]):
+        salt = hash_mix(salt ^ data[i])
+    return salt
+
+
+def as_salt(rng_or_salt):
+    """Coerce a phase RNG argument to an int32 salt.
+
+    The step driver passes the already-folded base salt (an int32
+    scalar, passthrough); direct phase calls (tests, external drivers)
+    may still hand a PRNG key, whose raw bits are folded via
+    :func:`key_salt`.
+    """
+    x = jnp.asarray(rng_or_salt)
+    if x.ndim == 0 and x.dtype == jnp.int32:
+        return x
+    return key_salt(rng_or_salt)
+
+
+def counter_candidates(salt, rows, sources, first_tables=(),
+                       second_tables=(), n_total=None, extra=None):
+    """Pure-jnp reference of the candidate-fused sampler (§Perf H17).
+
+    Generates the (B, C) candidate block that ``knn_merge``'s
+    ``cand_fused`` kernel derives in-kernel, with bit-identical draws:
+    slot ``g`` of row ``r`` consumes ``hash3(salt, rows[r], 2g)`` (the
+    'a' stream) and, for two-hop slots, ``hash3(salt, rows[r], 2g+1)``
+    (the 'b' stream).  Being keyed on *global* row ids makes the draws
+    order- and shard-invariant: a row samples the same candidates
+    whichever device or batch slice it lands in.
+
+    ``sources`` is a static tuple describing the candidate layout:
+      ("uniform", c)           c uniform probes over [0, n_total)
+      ("one_hop", f, c)        c entries of ``first_tables[f]`` (own row)
+      ("two_hop", f, s, c)     c chained picks
+                               ``second_tables[s][first_tables[f][r, a], b]``
+                               (SENTINEL mids fall back to the row id, as
+                               ``sample_hops`` does); the gather is flat
+                               (``reshape(-1)``), so no (B, c, K2)
+                               broadcast exists in the HLO
+      ("extra", c)             c precomputed candidates from ``extra``
+                               (e.g. cached reverse edges); consumes slot
+                               ids but no draws
+    """
+    b = rows.shape[0]
+    rows_c = rows.astype(jnp.int32)[:, None]
+    parts = []
+    g = 0
+    e0 = 0
+    for src in sources:
+        kind, c = src[0], src[-1]
+        if c == 0:
+            continue
+        slots = g + jnp.arange(c, dtype=jnp.int32)[None, :]
+        if kind == "uniform":
+            cand = counter_randint(salt, rows_c, 2 * slots, n_total)
+        elif kind == "one_hop":
+            f = first_tables[src[1]]
+            a = counter_randint(salt, rows_c, 2 * slots, f.shape[1])
+            cand = jnp.take_along_axis(f, a, axis=1)
+        elif kind == "two_hop":
+            f = first_tables[src[1]]
+            s = second_tables[src[2]]
+            n2, k2 = s.shape
+            a = counter_randint(salt, rows_c, 2 * slots, f.shape[1])
+            mid = jnp.take_along_axis(f, a, axis=1)
+            mid = jnp.where(mid == SENTINEL, rows_c % n2, mid)
+            mid = jnp.clip(mid, 0, n2 - 1)
+            bb = counter_randint(salt, rows_c, 2 * slots + 1, k2)
+            cand = s.reshape(-1)[mid * k2 + bb]
+        elif kind == "extra":
+            cand = extra[:, e0:e0 + c]
+            e0 += c
+        else:
+            raise ValueError(f"unknown candidate source {kind!r}")
+        parts.append(cand.astype(jnp.int32))
+        g += c
+    if not parts:
+        return jnp.zeros((b, 0), jnp.int32)
+    return jnp.concatenate(parts, axis=1)
+
+
+def counter_fill(salt, n, r):
+    """(n, r) uniform fill table for ``reverse_neighbors`` (counter RNG)."""
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    draws = jnp.arange(r, dtype=jnp.int32)[None, :]
+    return counter_randint(salt, rows, draws, n)
 
 
 def init_knn_idx(rng, n_rows, n_total, k, row_offset: int = 0):
@@ -71,13 +226,21 @@ def sample_uniform(rng, n, n_total, n_samples):
                               dtype=jnp.int32)
 
 
-def reverse_neighbors(idx, n_total, r, fill_rng):
+def reverse_neighbors(idx, n_total, r, fill_rng=None, fill=None):
     """Sampled reverse edges: up to ``r`` points that list i as a neighbour.
 
     Built with one argsort over the E = n*K directed edges (TPU-friendly
     replacement for the GPU scatter-append).  Rows with fewer than r reverse
-    edges are padded with uniform random points.
+    edges are padded with uniform random points: either threefry-sampled
+    from ``fill_rng`` (legacy) or a caller-precomputed ``fill`` table (the
+    counter-RNG path, which must keep threefry out of the step HLO).
+
+    The full rebuild costs an argsort over all n*K directed edges, so
+    callers cache the result in state and refresh it every
+    ``rev_refresh`` steps (``refresh=1`` == the legacy per-iteration
+    rebuild, bit-for-bit).
     """
+    assert (fill is None) != (fill_rng is None), "pass fill_rng xor fill"
     n, k = idx.shape
     tgt = idx.reshape(-1)
     src = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
@@ -89,8 +252,9 @@ def reverse_neighbors(idx, n_total, r, fill_rng):
     pos = starts[:, None] + jnp.arange(r)[None, :]
     valid = jnp.arange(r)[None, :] < counts[:, None]
     gathered = src_s[jnp.clip(pos, 0, src_s.shape[0] - 1)]
-    rand = sample_uniform(fill_rng, n_total, n_total, r)
-    return jnp.where(valid, gathered, rand)
+    if fill is None:
+        fill = sample_uniform(fill_rng, n_total, n_total, r)
+    return jnp.where(valid, gathered, fill)
 
 
 def dedup_candidates(rows, cur_idx, cand_idx):

@@ -274,3 +274,390 @@ def knn_merge_pallas(
     )(qid, gat, cur_idx, cand, qid[:, None], cur_w, cand_valid, x)
     new_idx, new_d, imp = outs
     return new_idx[:B], new_d[:B], imp[:B, 0] != 0
+
+
+# --------------------------------------------------------------------------
+# Candidate-fused sampling (§Perf H17): the kernel *generates* the
+# candidate slots it scores.
+#
+# After PR 4 the selection epilogue lived in-kernel but candidate
+# *generation* still ran as plain XLA: per step, `sample_hops`
+# materialised an (n, s, K2) two-hop gather broadcast in HBM, the
+# threefry split/randint chain re-ran, and the resulting (n, C) candidate
+# tensor round-tripped HBM just to be re-read by this kernel's SMEM
+# slabs.  Here the candidates are *derived* inside the kernel from state
+# it already stages:
+#
+#   * draws come from the counter-based hash RNG in ``repro.core.knn``
+#     (``hash3(salt, row, draw)``): the identical int32 arithmetic runs
+#     scalar-side (SMEM values -> DMA addresses) and vector-side (VPU
+#     lanes -> the merge's dedup operands), and the pure-jnp reference
+#     sampler (``knn_lib.counter_candidates``) is bit-exact against both;
+#   * one-hop picks read the row's resident first-table slab
+#     (SMEM for addresses, VMEM one-hot for the vector value);
+#   * two-hop picks chain through the second-table channel: the kernel
+#     computes ``mid = first[r, a]`` from SMEM, DMAs the single element
+#     ``second[mid, b]`` from HBM into paired SMEM/VMEM chain staging
+#     (``plan_row_gather(chain_slots=...)``), and only then issues the
+#     ``X[cand]`` row DMA through the shared double-buffered pipeline;
+#   * uniform probes are pure hash arithmetic;
+#   * precomputed "extra" slots (e.g. the cached reverse-edge table) ride
+#     in as classic SMEM/VMEM operand slabs.
+#
+# Per-candidate ``active``-row flags are fetched by element DMAs issued at
+# generation time and awaited just before the merge, so the whole
+# activity gather overlaps the scoring sweep.
+
+
+def _slot_plan(sources):
+    """Static per-slot layout of a ``sources`` tuple (see
+    ``knn_lib.counter_candidates`` for the grammar).  Slot ``g`` draws
+    the hash counters ``2g`` (a) and ``2g + 1`` (b)."""
+    slots = []
+    n_chain = n_extra = 0
+    for src in sources:
+        kind, c = src[0], src[-1]
+        for _ in range(c):
+            ent = {"kind": kind, "g": len(slots)}
+            if kind == "one_hop":
+                ent["f"] = src[1]
+            elif kind == "two_hop":
+                ent["f"], ent["s"] = src[1], src[2]
+                ent["t"] = n_chain
+                n_chain += 1
+            elif kind == "extra":
+                ent["e"] = n_extra
+                n_extra += 1
+            elif kind != "uniform":
+                raise ValueError(f"unknown candidate source {kind!r}")
+            slots.append(ent)
+    return slots, n_chain, n_extra
+
+
+def _make_cand_kernel(*, sources, n_first, first_widths, second_shapes,
+                      have_extra, have_active, rescore, k_cur, n_rows,
+                      m_size, block_m, sub_b, persistent_q):
+    """Build the kernel body for one static candidate-fused config."""
+    from repro.core import knn as knn_lib   # deferred: core imports kernels
+
+    slots, n_chain, _ = _slot_plan(sources)
+    c_total = len(slots)
+    koff = k_cur if rescore else 0
+    chains = [e for e in slots if e["kind"] == "two_hop"]
+
+    def kernel(*refs):
+        it = iter(refs)
+        qid_ref = next(it)                          # (block_b,) SMEM
+        salt_ref = next(it)                         # (1, 1) SMEM
+        first_s = [next(it) for _ in range(n_first)]
+        extra_s = next(it) if have_extra else None
+        curs_ref = next(it) if rescore else None    # clipped cur ids, SMEM
+        cur_idx_ref = next(it)                      # (block_b, K) VMEM
+        qid_v_ref = next(it)                        # (block_b, 1) VMEM
+        curw_ref = next(it)                         # (block_b, K) VMEM
+        first_v = [next(it) for _ in range(n_first)]
+        extra_v = next(it) if have_extra else None
+        second = [next(it) for _ in range(len(second_shapes))]
+        act_ref = next(it) if have_active else None  # (N, 1) i32 ANY
+        x_ref = next(it)                            # (N, M) ANY
+        idx_out, d_out, imp_out = next(it), next(it), next(it)
+        acc, q_scr, c_scr, q_sem, c_sem = (next(it), next(it), next(it),
+                                           next(it), next(it))
+        gat_smem = next(it)                         # (block_b, G) SMEM
+        cand_vmem = next(it)                        # (block_b, C) VMEM
+        if n_chain:
+            chain_smem, chain_vmem, chain_sem = next(it), next(it), next(it)
+        if have_active:
+            actv, act_sem = next(it), next(it)
+
+        j = pl.program_id(1)
+        block_b = acc.shape[0]
+        salt = salt_ref[0, 0]
+
+        def sdraw(row, draw, bound):
+            """Scalar counter draw (bit-identical to the vector path)."""
+            h = knn_lib.hash3(salt, row, jnp.int32(draw))
+            return (h & knn_lib._POS_MASK) % bound
+
+        def chain_ends(r, ent):
+            """(second table ref, mid, b) of one two-hop chain element."""
+            row = qid_ref[r]
+            sec = second[ent["s"]]
+            n2, k2 = second_shapes[ent["s"]]
+            a = sdraw(row, 2 * ent["g"], first_widths[ent["f"]])
+            mid = first_s[ent["f"]][r, a]
+            mid = jnp.where(mid == _SENTINEL, row % n2, mid)
+            mid = jnp.clip(mid, 0, n2 - 1)
+            return sec, mid, sdraw(row, 2 * ent["g"] + 1, k2)
+
+        def chain_copies(op):
+            def per_row(r, _):
+                for ent in chains:            # static unroll (C is small)
+                    sec, mid, b = chain_ends(r, ent)
+                    op(pltpu.make_async_copy(
+                        sec.at[mid, b], chain_smem.at[r, ent["t"]],
+                        chain_sem.at[0]))
+                    op(pltpu.make_async_copy(
+                        sec.at[mid, b], chain_vmem.at[r, ent["t"]],
+                        chain_sem.at[1]))
+                return _
+            jax.lax.fori_loop(0, block_b, per_row, None)
+
+        def act_copy(r, g):
+            return pltpu.make_async_copy(
+                act_ref.at[gat_smem[r, koff + g], 0], actv.at[r, g],
+                act_sem)
+
+        @pl.when(j == 0)
+        def _generate():
+            if n_chain:
+                chain_copies(lambda cp: cp.start())
+                chain_copies(lambda cp: cp.wait())
+
+            def fill_row(r, _):
+                row = qid_ref[r]
+                if rescore:
+                    def cp_cur(k, _):
+                        gat_smem[r, k] = curs_ref[r, k]
+                        return _
+                    jax.lax.fori_loop(0, k_cur, cp_cur, None)
+                for ent in slots:             # static unroll
+                    kind, g = ent["kind"], ent["g"]
+                    if kind == "uniform":
+                        v = sdraw(row, 2 * g, n_rows)
+                    elif kind == "one_hop":
+                        a = sdraw(row, 2 * g, first_widths[ent["f"]])
+                        v = first_s[ent["f"]][r, a]
+                    elif kind == "two_hop":
+                        v = chain_smem[r, ent["t"]]
+                    else:                     # extra
+                        v = extra_s[r, ent["e"]]
+                    gat_smem[r, koff + g] = jnp.clip(v, 0, n_rows - 1)
+                    if have_active:
+                        act_copy(r, g).start()
+                return _
+            jax.lax.fori_loop(0, block_b, fill_row, None)
+
+            # vector pass: the same draws on VPU lanes feed the merge's
+            # dedup compares (raw ids, SENTINELs preserved)
+            rows_v = qid_v_ref[...]                      # (block_b, 1)
+            g0 = 0
+            for src in sources:
+                kind, c = src[0], src[-1]
+                sl = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1) + g0
+                if kind == "uniform":
+                    blk = knn_lib.counter_randint(salt, rows_v, 2 * sl,
+                                                  n_rows)
+                elif kind == "one_hop":
+                    tab = first_v[src[1]][...]
+                    a = knn_lib.counter_randint(salt, rows_v, 2 * sl,
+                                                tab.shape[1])
+                    kk = jax.lax.broadcasted_iota(
+                        jnp.int32, (1, 1, tab.shape[1]), 2)
+                    blk = jnp.sum(jnp.where(a[:, :, None] == kk,
+                                            tab[:, None, :], 0), axis=2)
+                elif kind == "two_hop":
+                    t0 = next(e["t"] for e in slots
+                              if e["g"] == g0)
+                    blk = chain_vmem[:, t0:t0 + c]
+                else:                                     # extra
+                    e0 = next(e["e"] for e in slots if e["g"] == g0)
+                    blk = extra_v[:, e0:e0 + c]
+                cand_vmem[:, g0:g0 + c] = blk.astype(jnp.int32)
+                g0 += c
+
+        score_gather_block(qid_ref, gat_smem, x_ref, acc, q_scr, c_scr,
+                           q_sem, c_sem, m_size=m_size, block_m=block_m,
+                           sub_b=sub_b, persistent_q=persistent_q)
+
+        @pl.when(j == pl.num_programs(1) - 1)
+        def _merge():
+            if have_active:
+                def drain(r, _):
+                    for ent in slots:
+                        act_copy(r, ent["g"]).wait()
+                    return _
+                jax.lax.fori_loop(0, block_b, drain, None)
+                ext_valid = actv[...] != 0
+            else:
+                # all-true, computed (a literal bool array would be a
+                # captured kernel constant)
+                cv = cand_vmem[...]
+                ext_valid = cv == cv
+            if rescore:
+                cur_d = jnp.where(curw_ref[...] != 0, acc[:, :k_cur],
+                                  jnp.inf)
+                cand_d = acc[:, k_cur:]
+            else:
+                cur_d = curw_ref[...]
+                cand_d = acc[...]
+            new_idx, new_d, improved = merge_select(
+                qid_v_ref[...], cur_idx_ref[...], cur_d, cand_vmem[...],
+                cand_d, ext_valid)
+            idx_out[...] = new_idx
+            d_out[...] = new_d
+            imp_out[...] = improved.astype(jnp.int32)[:, None]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sources", "rescore", "block_b", "block_m",
+                              "sub_b", "persistent_q", "interpret"))
+def knn_merge_cand_pallas(
+    x: jnp.ndarray,
+    qid: jnp.ndarray,
+    cur_idx: jnp.ndarray,
+    cur_w: jnp.ndarray,
+    salt,
+    first_tables=(),
+    second_tables=(),
+    extra=None,
+    active=None,
+    *,
+    sources,
+    rescore: bool,
+    block_b: int = 128,
+    block_m: int = 512,
+    sub_b: int = None,
+    persistent_q: bool = None,
+    interpret: bool = False,
+):
+    """Candidate-fused refinement: sample, score, dedup and merge in ONE
+    launch (§Perf H17).
+
+    Args mirror :func:`knn_merge_pallas` except that the (B, C) candidate
+    operand is replaced by its *generator*: ``salt`` (int32 counter-RNG
+    salt), ``sources`` (static layout, see ``knn_lib.counter_candidates``),
+    ``first_tables`` (tuple of (B, Kf) resident slabs), ``second_tables``
+    (tuple of (N2, K2) HBM tables for the chained two-hop picks) and
+    optional ``extra`` precomputed slots.  ``active`` is the global (N,)
+    bool membership mask (None == all rows active): per-candidate flags
+    are DMA'd in-kernel, matching ``active[clip(cand)]`` on the ref.
+    """
+    N, M = x.shape
+    B, K = cur_idx.shape
+    # zero-width sources are legal in the grammar but contribute no
+    # slots; drop them here so the static slot plan and the vector-pass
+    # offsets only ever see populated sources (slot/draw numbering is
+    # unchanged -- empty sources never advanced it)
+    sources = tuple(s for s in sources if s[-1] > 0)
+    slots, n_chain, n_extra = _slot_plan(sources)
+    C = len(slots)
+    assert C > 0, "cand-fused merge needs at least one candidate source"
+    have_extra = n_extra > 0
+    if have_extra:
+        assert extra is not None and extra.shape == (B, n_extra), \
+            (n_extra, None if extra is None else extra.shape)
+    have_active = active is not None
+    G = C + (K if rescore else 0)
+
+    qid = qid.astype(jnp.int32)
+    cur_idx = cur_idx.astype(jnp.int32)
+    salt = jnp.asarray(salt, jnp.int32).reshape(1, 1)
+    first_tables = tuple(f.astype(jnp.int32) for f in first_tables)
+    second_tables = tuple(s.astype(jnp.int32) for s in second_tables)
+    cur_w = cur_w.astype(jnp.int32 if rescore else jnp.float32)
+    if rescore:
+        curs = jnp.clip(cur_idx, 0, N - 1)
+    if have_extra:
+        extra = extra.astype(jnp.int32)
+    if have_active:
+        act = active.astype(jnp.int32)[:, None]
+
+    block_b, block_m, sub_b, persistent_q, n_mchunks, q_scr_shape = \
+        plan_row_gather(B, M, G, x.dtype.itemsize, block_b=block_b,
+                        block_m=block_m, sub_b=sub_b,
+                        persistent_q=persistent_q, chain_slots=n_chain)
+    Bp = _round_up(B, block_b)
+    if Bp != B:
+        pad = Bp - B
+        qid = jnp.pad(qid, (0, pad))
+        cur_idx = jnp.pad(cur_idx, ((0, pad), (0, 0)))
+        cur_w = jnp.pad(cur_w, ((0, pad), (0, 0)))
+        first_tables = tuple(jnp.pad(f, ((0, pad), (0, 0)))
+                             for f in first_tables)
+        if rescore:
+            curs = jnp.pad(curs, ((0, pad), (0, 0)))
+        if have_extra:
+            extra = jnp.pad(extra, ((0, pad), (0, 0)))
+
+    def blk(width, space=None):
+        kw = {} if space is None else {"memory_space": space}
+        return pl.BlockSpec((block_b, width), lambda i, j: (i, 0), **kw)
+
+    operands = [qid, salt]
+    in_specs = [
+        pl.BlockSpec((block_b,), lambda i, j: (i,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1), lambda i, j: (0, 0), memory_space=pltpu.SMEM),
+    ]
+    for f in first_tables:
+        operands.append(f)
+        in_specs.append(blk(f.shape[1], pltpu.SMEM))
+    if have_extra:
+        operands.append(extra)
+        in_specs.append(blk(n_extra, pltpu.SMEM))
+    if rescore:
+        operands.append(curs)
+        in_specs.append(blk(K, pltpu.SMEM))
+    operands += [cur_idx, qid[:, None], cur_w]
+    in_specs += [blk(K), blk(1), blk(K)]
+    for f in first_tables:
+        operands.append(f)
+        in_specs.append(blk(f.shape[1]))
+    if have_extra:
+        operands.append(extra)
+        in_specs.append(blk(n_extra))
+    for s in second_tables:
+        operands.append(s)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    if have_active:
+        operands.append(act)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    operands.append(x)
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+
+    scratch = [
+        pltpu.VMEM((block_b, G), jnp.float32),
+        pltpu.VMEM(q_scr_shape, x.dtype),
+        pltpu.VMEM((2, sub_b, G, block_m), x.dtype),
+        pltpu.SemaphoreType.DMA((n_mchunks,)),
+        pltpu.SemaphoreType.DMA((2,)),
+        pltpu.SMEM((block_b, G), jnp.int32),
+        pltpu.VMEM((block_b, C), jnp.int32),
+    ]
+    if n_chain:
+        scratch += [pltpu.SMEM((block_b, n_chain), jnp.int32),
+                    pltpu.VMEM((block_b, n_chain), jnp.int32),
+                    pltpu.SemaphoreType.DMA((2,))]
+    if have_active:
+        scratch += [pltpu.VMEM((block_b, C), jnp.int32),
+                    pltpu.SemaphoreType.DMA(())]
+
+    kernel = _make_cand_kernel(
+        sources=sources, n_first=len(first_tables),
+        first_widths=tuple(f.shape[1] for f in first_tables),
+        second_shapes=tuple(s.shape for s in second_tables),
+        have_extra=have_extra, have_active=have_active, rescore=rescore,
+        k_cur=K, n_rows=N, m_size=M, block_m=block_m, sub_b=sub_b,
+        persistent_q=persistent_q)
+
+    grid = (Bp // block_b, n_mchunks)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[blk(K), blk(K), blk(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, K), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, K), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        ],
+        scratch_shapes=scratch,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+    new_idx, new_d, imp = outs
+    return new_idx[:B], new_d[:B], imp[:B, 0] != 0

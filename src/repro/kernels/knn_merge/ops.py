@@ -13,8 +13,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.knn_merge.kernel import knn_merge_pallas
-from repro.kernels.knn_merge.ref import knn_merge_ref
+from repro.kernels.knn_merge.kernel import (knn_merge_cand_pallas,
+                                            knn_merge_pallas)
+from repro.kernels.knn_merge.ref import knn_merge_cand_ref, knn_merge_ref
 
 
 def _default_backend() -> str:
@@ -25,8 +26,9 @@ def _default_backend() -> str:
     return "pallas" if platform == "tpu" else "xla"
 
 
-def knn_merge(x, qid, cur_idx, cur_d, cand, *, cand_active=None,
-              cur_valid=None, backend: str = "auto"):
+def knn_merge(x, qid, cur_idx, cur_d, cand=None, *, cand_active=None,
+              cur_valid=None, backend: str = "auto", sources=None,
+              salt=None, first_tables=(), second_tables=(), active=None):
     """Score C candidates, dedup, and top-K merge -- ONE fused operation.
 
     Replaces the per-iteration selection epilogue ``dedup_candidates`` ->
@@ -34,6 +36,13 @@ def knn_merge(x, qid, cur_idx, cur_d, cand, *, cand_active=None,
     the dedup and the (stable, top_k-tie-identical) merge in-register per
     row block, so no (B, C) distance buffer, no (B, C, K)/(B, C, C) dedup
     broadcast tensor and no sort exist in the step HLO.
+
+    Candidate-fused mode (§Perf H17): pass ``sources``/``salt`` instead
+    of a precomputed ``cand`` and the candidates themselves are *derived*
+    from the counter-based hash RNG plus chained gathers through the
+    neighbour tables -- in-kernel on the Pallas path (no (B, C) candidate
+    tensor, no threefry, no (B, s, K2) two-hop broadcast in the HLO), or
+    via the bit-identical jnp reference sampler on the 'xla' path.
 
     Args:
       x: (N, M) source matrix (X for HD refinement, Y for LD).
@@ -43,11 +52,20 @@ def knn_merge(x, qid, cur_idx, cur_d, cand, *, cand_active=None,
         ``None`` to re-score the current neighbours in-kernel (LD mode:
         the embedding moved since the list was merged).  ``None`` requires
         ``cur_valid``.
-      cand: (B, C) int32 candidate ids (SENTINEL / out-of-range allowed).
+      cand: (B, C) int32 candidate ids (SENTINEL / out-of-range allowed);
+        in candidate-fused mode, the optional (B, C_extra) slab backing
+        the ``("extra", c)`` source slots (e.g. cached reverse edges).
       cand_active: optional (B, C) bool extra validity mask (active-row
         membership); structural dedup (self / current / earlier-duplicate
-        / SENTINEL) always happens inside.
+        / SENTINEL) always happens inside.  Candidate-fused mode computes
+        this internally from ``active`` instead.
       cur_valid: (B, K) bool validity of current slots, rescore mode only.
+      sources: static candidate layout (see ``knn_lib.counter_candidates``)
+        -- presence selects candidate-fused mode.
+      salt: int32 counter-RNG salt (candidate-fused mode).
+      first_tables: tuple of (B, Kf) resident first-table slabs.
+      second_tables: tuple of (N2, K2) global tables for two-hop chains.
+      active: (N,) bool global row membership, or None == all active.
     Returns:
       (new_idx (B, K) int32, new_d (B, K) f32, improved (B,) bool) --
       the ``merge_knn`` contract: sorted ascending, stable ties,
@@ -60,6 +78,27 @@ def knn_merge(x, qid, cur_idx, cur_d, cand, *, cand_active=None,
         assert cur_valid is None, "cur_valid is a rescore-mode option"
     if backend == "auto":
         backend = _default_backend()
+
+    if sources is not None:
+        assert salt is not None, "candidate-fused mode requires a salt"
+        assert cand_active is None, \
+            "candidate-fused mode derives cand_active from `active`"
+        # zero-width sources are dropped up front so the static layout the
+        # kernel specialises on matches the ref's concatenation exactly
+        sources = tuple(s for s in sources if s[-1] > 0)
+        if backend == "xla":
+            return knn_merge_cand_ref(
+                x, qid, cur_idx, cur_d, salt=salt, sources=sources,
+                first_tables=first_tables, second_tables=second_tables,
+                extra=cand, active=active, cur_valid=cur_valid)
+        if backend in ("pallas", "interpret"):
+            cur_w = cur_valid if rescore else cur_d
+            return knn_merge_cand_pallas(
+                x, qid, cur_idx, cur_w, salt, first_tables, second_tables,
+                cand, active, sources=sources, rescore=rescore,
+                interpret=(backend == "interpret"))
+        raise ValueError(f"unknown backend {backend!r}")
+
     if backend == "xla":
         return knn_merge_ref(x, qid, cur_idx, cur_d, cand,
                              cand_active=cand_active, cur_valid=cur_valid)

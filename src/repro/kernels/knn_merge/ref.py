@@ -62,3 +62,29 @@ def knn_merge_rank_ref(x, qid, cur_idx, cur_d, cand, *, cand_active=None,
         cand_active = jnp.ones(cand.shape, bool)
     return merge_select(qid[:, None], cur_idx, cur_d, cand, cand_d,
                         cand_active)
+
+
+def knn_merge_cand_ref(x, qid, cur_idx, cur_d, *, salt, sources,
+                       first_tables=(), second_tables=(), extra=None,
+                       active=None, cur_valid=None, rank=False):
+    """Candidate-fused oracle (§Perf H17): the counter-RNG jnp sampler
+    feeding the selection pipeline.
+
+    Generates the candidate block with ``knn_lib.counter_candidates``
+    (bit-identical draws to the kernel's in-register generation -- flat
+    two-hop gathers, no (B, s, K2) broadcast, no threefry) and resolves
+    per-candidate activity as ``active[clip(cand)]`` exactly like the
+    kernel's element DMAs.  ``rank=True`` runs the stable-rank selection
+    (the kernel's algorithm as flat XLA) instead of the legacy
+    dedup+top_k pipeline; both give identical outputs.
+    """
+    knn_lib = _knn_lib()
+    cand = knn_lib.counter_candidates(salt, qid, sources, first_tables,
+                                      second_tables, n_total=x.shape[0],
+                                      extra=extra)
+    cand_active = None
+    if active is not None:
+        cand_active = active[jnp.clip(cand, 0, active.shape[0] - 1)]
+    fn = knn_merge_rank_ref if rank else knn_merge_ref
+    return fn(x, qid, cur_idx, cur_d, cand, cand_active=cand_active,
+              cur_valid=cur_valid)

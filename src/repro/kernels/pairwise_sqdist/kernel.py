@@ -234,10 +234,18 @@ def _pick_sub_b(block_b: int) -> int:
 
 
 def plan_row_gather(B, M, G, itemsize, *, block_b, block_m, sub_b,
-                    persistent_q):
+                    persistent_q, chain_slots=0):
     """Tiling plan for the row-gather scoring pipeline (shared with the
     merge-fused ``knn_merge`` kernel): resolves the block/sub-block sizes
     against the VMEM staging budget and the persistent-q heuristic.
+
+    ``chain_slots`` is the second-table channel (§Perf H17): the
+    candidate-fused merge kernel stages that many chained
+    ``second_idx[mid, b]`` int32 picks per block row (one SMEM + one VMEM
+    element each, so the in-flight X-row DMAs can take their addresses
+    from SMEM while the merge reads the same values as vectors); the
+    per-row chain staging is charged against the same budget as the row
+    staging so a wide chain shrinks ``block_b`` like a wide ``G`` does.
 
     Returns (block_b, block_m, sub_b, persistent_q, n_mchunks,
     q_scr_shape) with ``G`` gathered rows per block row.
@@ -248,8 +256,9 @@ def plan_row_gather(B, M, G, itemsize, *, block_b, block_m, sub_b,
         sub_b = _pick_sub_b(block_b)
     assert block_b % sub_b == 0, (block_b, sub_b)
     # keep the 2-slot (G+1) row-chunk staging comfortably inside VMEM
+    # (+ the chained second-table picks: 2 int32 copies per chain slot)
     while block_b > 8 and 2 * min(sub_b, block_b) * (G + 1) * block_m \
-            * itemsize > 8 * 2 ** 20:
+            * itemsize + 2 * block_b * chain_slots * 4 > 8 * 2 ** 20:
         block_b //= 2
         # a halved block_b may no longer be a multiple of sub_b: every row
         # of a block must land in some sub-block, so re-derive a divisor
