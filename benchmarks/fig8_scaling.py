@@ -72,6 +72,48 @@ def _chunked_rows(n, Xj, iters, chunk_sizes, trials=5):
     return rows
 
 
+def _health_rows(n, Xj, iters, T, trials=5):
+    """Full-chunk A/B of the in-scan health telemetry (resilience layer):
+    ``health_metrics=True`` (finite-fraction / max-|Y| / first-bad-step
+    scalars folded into the chunk scan) vs ``False`` (the pre-resilience
+    ChunkMetrics).  Paired/interleaved best-of like the chunked rows; the
+    acceptance bar is <= 5% overhead on the full step."""
+    cfg = funcsne.FuncSNEConfig(n_points=n, dim_hd=Xj.shape[1])
+    hp = funcsne.default_hparams(n)
+    st0 = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+    n_chunks = max(1, iters // T)
+
+    runners = {}
+    for health in (False, True):
+        chunk = funcsne.make_chunked_step(cfg, T, health_metrics=health)
+
+        def run(chunk=chunk):
+            st = _copy(st0)               # the program donates its input
+            for _ in range(n_chunks):
+                st, _, _ = chunk(st, Xj, hp)
+            jax.block_until_ready(st.Y)
+            return n_chunks * T
+
+        run()                             # compile outside the clock
+        runners[health] = run
+
+    best = {h: float("inf") for h in runners}
+    for t in range(trials):
+        order = (False, True) if t % 2 == 0 else (True, False)
+        for h in order:
+            steps, dt = timed(runners[h])
+            best[h] = min(best[h], dt * 1e6 / steps)
+    ratio = best[True] / max(best[False], 1e-9)
+    return [
+        row(f"fig8_health_off_n{n}", best[False],
+            f"T{T} chunks, no health telemetry"),
+        row(f"fig8_health_on_n{n}", best[True],
+            f"T{T} chunks, in-scan health telemetry"),
+        row(f"fig8_health_overhead_n{n}", ratio,
+            f"on_us/off_us={ratio:.3f} (ratio, not us; bar <=1.05)"),
+    ]
+
+
 def _cand_rows(n, iters, trials=3):
     """Full-step A/B of the candidate-generation phase (§Perf H17):
     ``cand_fused=False`` (legacy threefry sampler + (n, s, K2) two-hop
@@ -154,6 +196,10 @@ def run(sizes=(512, 1024, 2048, 4096), iters=120, chunk_sizes=(1, 50),
     n = sizes[-1]
     X, _ = blobs(n=n, dim=32, n_centers=8, center_std=6.0, seed=0)
     rows += _chunked_rows(n, jnp.asarray(X), iters, tuple(chunk_sizes))
+
+    # health-telemetry A/B (resilience layer): the on-device probes must
+    # stay in the noise next to the force phase
+    rows += _health_rows(n, jnp.asarray(X), iters, chunk_sizes[-1])
 
     # candidate-phase A/B (§Perf H17): more calls at the small size so
     # sub-ms deltas aren't swamped by dispatch noise

@@ -1,9 +1,17 @@
 """Dynamic datasets (paper contribution 2): points arrive in waves during
 a single continual optimisation -- no precompute stall, no recompilation.
 
+Each wave's optimisation runs through the resilient chunked driver
+(``fit(state=..., resilience=ResiliencePolicy(...))``): health telemetry
+is checked after every chunk, the full state is checkpointed between
+waves' chunks, and a NaN/explosion chunk would roll back and retry with a
+backed-off learning rate instead of killing the session -- the always-on
+interactive service the paper pitches.
+
   PYTHONPATH=src python examples/dynamic_stream.py
 """
 import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -16,6 +24,7 @@ import numpy as np               # noqa: E402
 from repro.core import funcsne                       # noqa: E402
 from repro.core.knn import exact_knn                 # noqa: E402
 from repro.core.quality import rnx_auc, rnx_curve    # noqa: E402
+from repro.core.resilience import ResiliencePolicy   # noqa: E402
 from repro.data.synthetic import blobs               # noqa: E402
 
 
@@ -28,13 +37,20 @@ def main():
     active = jnp.arange(n_total) < wave
     st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg, active=active,
                             perplexity=hp.perplexity)
-    step = funcsne.make_step(cfg)
+
+    # session-lifetime policy: one checkpoint dir spans all waves, so a
+    # killed session resumes (fit(resume_from=...)) with whatever points
+    # had streamed in by the last committed chunk
+    ckdir = tempfile.mkdtemp(prefix="funcsne-stream-ck-")
+    policy = ResiliencePolicy(checkpoint_dir=ckdir, checkpoint_every=2,
+                              on_event=lambda e: print(f"  [resilience] {e}"))
+    hold = lambda it, n_iter, h: h      # hp held constant within a wave
 
     for wave_i in range(3):
         t0 = time.time()
-        for _ in range(300):
-            st = step(st, Xj, hp)
-        jax.block_until_ready(st.Y)
+        st, _ = funcsne.fit(Xj, cfg=cfg, n_iter=300, chunk_size=50,
+                            hparams=hp, schedule=hold, state=st,
+                            resilience=policy, validate=wave_i == 0)
         act = int(st.active.sum())
         # sample the first 512 rows (active in every wave); the exact KNN
         # reference must exclude not-yet-arrived points, and the R_NX
@@ -51,10 +67,12 @@ def main():
             print(f"  + added {len(new)} points mid-run (no recompile)")
     # and remove a cluster
     st = funcsne.remove_points(st, jnp.nonzero(jnp.asarray(labels == 0))[0])
-    for _ in range(100):
-        st = step(st, Xj, hp)
+    st, _ = funcsne.fit(Xj, cfg=cfg, n_iter=100, chunk_size=50, hparams=hp,
+                        schedule=hold, state=st, resilience=policy,
+                        validate=False)
     print(f"removed cluster 0 -> {int(st.active.sum())} active; "
-          f"embedding finite: {bool(jnp.isfinite(st.Y).all())}")
+          f"embedding finite: {bool(jnp.isfinite(st.Y).all())}; "
+          f"{len(policy.events)} resilience events; checkpoints in {ckdir}")
 
 
 if __name__ == "__main__":

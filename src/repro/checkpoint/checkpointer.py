@@ -88,6 +88,9 @@ class Checkpointer:
 
         if blocking:
             write()
+            if self.last_error is not None:   # blocking callers want it NOW
+                err, self.last_error = self.last_error, None
+                raise err
         else:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()

@@ -32,6 +32,17 @@ Driver surface (one traced step, three dispatch granularities):
   ``make_distributed_step(cfg, mesh, ..., chunk=None)``
       the same two contracts under ``shard_map``: ``chunk=None`` keeps
       the classic one-step program, ``chunk=T`` the scan-chunked one.
+  ``fit(..., resilience=ResiliencePolicy(...), resume_from=dir)``
+      the resilient outer loop on the chunked driver: the chunk scan
+      folds health telemetry into :class:`ChunkMetrics` (finite fraction
+      of Y over active rows, max |Y|, first bad step -- zero extra host
+      syncs), a tripped probe rolls back to the last healthy chunk
+      boundary and retries with backed-off lr/exaggeration (bounded,
+      then ``EmbeddingDiverged``), the full state checkpoints through
+      ``repro.checkpoint`` for bit-deterministic resume, Pallas launch
+      failures demote per kernel family to the XLA refs
+      (``repro.kernels.fallback``), and ``repro.runtime.faults`` injects
+      every one of those failures deterministically in tests/CI.
 
 Config flag matrix (orthogonal, all combinations tested):
   ``gather_fused``   True: kernels take indices and DMA rows in-kernel
@@ -145,8 +156,10 @@ are psum'd -- tensor parallelism for the NE.  Passing ``ctx=AxisCtx()``
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -157,10 +170,13 @@ from repro import compat
 from repro.core import affinities
 from repro.core import knn as knn_lib
 from repro.core.knn import SENTINEL
+from repro.core.resilience import EmbeddingDiverged, ResiliencePolicy
+from repro.kernels import fallback
 from repro.kernels.knn_merge.ops import knn_merge
 from repro.kernels.ne_forces.ops import ne_forces, ne_forces_gather
 from repro.kernels.pairwise_sqdist.ops import (pairwise_sqdist,
                                                pairwise_sqdist_gather)
+from repro.runtime import faults
 
 
 # --------------------------------------------------------------------------
@@ -798,10 +814,46 @@ def pca_directions(X, d: int, n_iter: int = 24, rng=None):
     return jax.lax.fori_loop(0, n_iter, body, jnp.linalg.qr(W)[0])
 
 
+def validate_inputs(X, cfg: FuncSNEConfig, *, check_finite: bool = True):
+    """Fail fast with a clear ``ValueError`` instead of NaN embeddings.
+
+    A single non-finite row in ``X`` poisons the squared-distance pass,
+    the sigma solve and eventually every force -- the resulting NaN
+    embedding surfaces hundreds of iterations later with no pointer back
+    here.  ``check_finite`` costs one O(n*M) reduction + one host sync,
+    once per ``fit`` (never per step).
+    """
+    X = jnp.asarray(X)
+    if X.ndim != 2:
+        raise ValueError(
+            f"X must be a 2-D (n, dim_hd) array, got shape {X.shape}")
+    if X.dtype.kind not in "fiu":
+        raise ValueError(
+            f"X must be real-numeric (float/int), got dtype {X.dtype}")
+    if X.shape != (cfg.n_points, cfg.dim_hd):
+        raise ValueError(
+            f"X shape {X.shape} does not match cfg (n_points="
+            f"{cfg.n_points}, dim_hd={cfg.dim_hd})")
+    n = cfg.n_points
+    for name, k in (("k_hd", cfg.k_hd), ("k_ld", cfg.k_ld)):
+        if k >= n:
+            raise ValueError(
+                f"cfg.{name}={k} must be < n_points={n}: a row cannot "
+                f"have {k} distinct neighbours among {n - 1} other points")
+    if check_finite and X.dtype.kind == "f":
+        bad = jnp.sum(~jnp.all(jnp.isfinite(X), axis=1))
+        if int(bad):
+            raise ValueError(
+                f"X contains {int(bad)} row(s) with non-finite (NaN/inf) "
+                f"entries; clean or drop them before embedding")
+
+
 def init_state(rng, X, cfg: FuncSNEConfig, *, init: str = "pca",
-               active=None, Y0=None, perplexity=30.0) -> FuncSNEState:
+               active=None, Y0=None, perplexity=30.0,
+               validate: bool = True) -> FuncSNEState:
     n, d = cfg.n_points, cfg.dim_ld
-    assert X.shape == (n, cfg.dim_hd), (X.shape, cfg)
+    if validate:
+        validate_inputs(X, cfg)
     r_y, r_hd, r_ld, r_state = jax.random.split(rng, 4)
     if Y0 is not None:
         Y = jnp.asarray(Y0, jnp.float32)
@@ -861,18 +913,36 @@ class ChunkMetrics(NamedTuple):
     """Per-chunk driver telemetry -- ONE host sync per chunk, not per step.
 
     All fields are device scalars; a GUI/driver reads them once per chunk
-    (the headless equivalent of the paper's per-frame status line).
+    (the headless equivalent of the paper's per-frame status line).  The
+    health fields (finite_frac / y_max_abs / bad_step) are the on-device
+    half of the resilience layer: they are folded into the chunk scan
+    alongside the displacement EMA, so fault *detection* costs zero extra
+    host syncs -- the probe in ``ResiliencePolicy.check`` reads the same
+    tuple the driver already drains once per chunk.
     """
     step: Any           # () i32  global iteration count after the chunk
     n_snapshots: Any    # () i32  ring slots written this chunk
     disp_ema: Any       # () f32  EMA over the chunk of mean |vel| (active)
     zhat: Any           # () f32  Z estimator at chunk end
     ema_new_frac: Any   # () f32  HD-refinement EMA at chunk end
+    finite_frac: Any    # () f32  MIN over the chunk of the fraction of
+    #                     finite Y entries among active rows (1.0=healthy)
+    y_max_abs: Any      # () f32  MAX over the chunk of max |Y| over
+    #                     active rows' finite entries (explosion probe)
+    bad_step: Any       # () i32  first global step whose embedding held a
+    #                     non-finite active entry; -1 = none this chunk
+
+
+# decay of the per-chunk ChunkMetrics EMAs; ``fit`` needs the same
+# constant to normalise thresholds by the chunk's EMA saturation factor
+# (1 - decay**T), so the two must never drift apart
+_METRICS_DECAY = 0.9
 
 
 def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
               snapshot_every: int = 0, ctx: AxisCtx = AxisCtx(),
-              metrics_decay: float = 0.9):
+              metrics_decay: float = _METRICS_DECAY,
+              health_metrics: bool = True):
     """Traced chunk body: ``(st, X, hp) -> (st, snaps, ChunkMetrics)``.
 
     Runs ``T`` iterations of :func:`funcsne_step` inside ONE
@@ -890,7 +960,14 @@ def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
         same instants the host loop device_get'd); the host drains
         ``snaps[:metrics.n_snapshots]`` once per chunk;
       * metrics: per-step scalars are EMA'd into :class:`ChunkMetrics` so
-        the driver/GUI syncs one tuple per chunk.
+        the driver/GUI syncs one tuple per chunk;
+      * health telemetry: the finite-fraction of ``Y`` (min over the
+        chunk), the max |Y| (max over the chunk) and the first step with
+        a non-finite active entry fold into the same carry
+        (``health_metrics=False`` elides the computation entirely -- the
+        A/B knob behind the ``fig8_health_*`` bench rows).  The scalars
+        ride in the one ChunkMetrics sync, so the resilience layer's
+        fault detection adds no host round-trips.
     """
     assert T >= 1, T
     if schedule is not None and n_iter is None:
@@ -901,16 +978,29 @@ def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
 
     def chunk(st: FuncSNEState, X, hp: HParams):
         snaps0 = jnp.zeros((n_snap, n, d), jnp.float32)
+        health0 = (jnp.float32(1.0), jnp.float32(0.0), jnp.int32(-1))
 
         def body(carry, _):
-            st, snaps, k, disp = carry
+            st, snaps, k, disp, health = carry
             hp_t = schedule(st.step, n_iter, hp) if schedule else hp
             st = funcsne_step(cfg, st, X, hp_t, ctx)
+            act_col = st.active[:, None].astype(jnp.float32)
             n_act = jnp.maximum(jnp.sum(st.active.astype(jnp.float32)), 1.0)
-            act_disp = jnp.sum(jnp.abs(st.vel)
-                               * st.active[:, None].astype(jnp.float32)) \
-                / (n_act * d)
+            act_disp = jnp.sum(jnp.abs(st.vel) * act_col) / (n_act * d)
             disp = metrics_decay * disp + (1.0 - metrics_decay) * act_disp
+            if health_metrics:
+                # O(n*d) elementwise reads of Y -- noise next to the
+                # O(n*K*d) force phase, and entirely inside the scan:
+                # zero extra host syncs, zero extra dispatches
+                ff_min, ymax, bad = health
+                finite = jnp.isfinite(st.Y)
+                ff = jnp.sum(finite.astype(jnp.float32) * act_col) \
+                    / jnp.maximum(n_act * d, 1.0)
+                step_max = jnp.max(jnp.where(
+                    finite & (act_col > 0), jnp.abs(st.Y), 0.0))
+                bad = jnp.where((bad < 0) & (ff < 1.0), st.step - 1, bad)
+                health = (jnp.minimum(ff_min, ff),
+                          jnp.maximum(ymax, step_max), bad)
             if n_snap:
                 due = (st.step % snapshot_every) == 0
                 snaps = jax.lax.cond(
@@ -919,29 +1009,33 @@ def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
                         s, st.Y, jnp.clip(k, 0, n_snap - 1), 0),
                     lambda s: s, snaps)
                 k = k + due.astype(jnp.int32)
-            return (st, snaps, k, disp), None
+            return (st, snaps, k, disp, health), None
 
-        (st, snaps, k, disp), _ = jax.lax.scan(
-            body, (st, snaps0, jnp.int32(0), jnp.float32(0.0)), None,
-            length=T)
+        (st, snaps, k, disp, health), _ = jax.lax.scan(
+            body, (st, snaps0, jnp.int32(0), jnp.float32(0.0), health0),
+            None, length=T)
         metrics = ChunkMetrics(step=st.step, n_snapshots=k, disp_ema=disp,
-                               zhat=st.zhat, ema_new_frac=st.ema_new_frac)
+                               zhat=st.zhat, ema_new_frac=st.ema_new_frac,
+                               finite_frac=health[0], y_max_abs=health[1],
+                               bad_step=health[2])
         return st, snaps, metrics
 
     return chunk
 
 
 def make_chunked_step(cfg: FuncSNEConfig, T: int, *, schedule=None,
-                      n_iter=None, snapshot_every: int = 0):
+                      n_iter=None, snapshot_every: int = 0,
+                      health_metrics: bool = True):
     """Jitted ``T``-iteration device program; state is donated.
 
     Returns ``chunk(st, X, hp) -> (st, snaps, ChunkMetrics)``.  One
-    dispatch runs the whole chunk: schedule, snapshot ring and metrics all
-    live on device (see :func:`_chunk_fn`), so the per-iteration host cost
-    is the per-chunk cost / ``T``.
+    dispatch runs the whole chunk: schedule, snapshot ring, metrics and
+    health telemetry all live on device (see :func:`_chunk_fn`), so the
+    per-iteration host cost is the per-chunk cost / ``T``.
     """
     return jax.jit(_chunk_fn(cfg, T, schedule=schedule, n_iter=n_iter,
-                             snapshot_every=snapshot_every),
+                             snapshot_every=snapshot_every,
+                             health_metrics=health_metrics),
                    donate_argnums=(0,))
 
 
@@ -1007,13 +1101,34 @@ def remove_points(st: FuncSNEState, ids) -> FuncSNEState:
                        new_flag=st.new_flag.at[ids].set(False))
 
 
+def _copy_state(st: FuncSNEState) -> FuncSNEState:
+    return jax.tree.map(lambda a: jnp.array(a, copy=True), st)
+
+
+def _scaled_hp(hp: HParams, lr_scale: float, ex_scale: float) -> HParams:
+    """Retry backoff applied to the traced hyperparameters.
+
+    Identity at scale 1.0 (no new arrays), so a run that never trips a
+    health probe is bit-identical to one without a policy; the schedule
+    composes on top (it multiplies ``hp.lr``), so backoff scales the
+    whole annealing curve rather than fighting it.
+    """
+    if lr_scale == 1.0 and ex_scale == 1.0:
+        return hp
+    return hp._replace(
+        lr=hp.lr * jnp.float32(lr_scale),
+        exaggeration=hp.exaggeration * jnp.float32(ex_scale))
+
+
 def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         hparams: HParams = None,
         schedule: Callable[[int, int, HParams], HParams] = None,
         init: str = "pca", snapshot_every: int = 0,
         callback: Callable[[int, FuncSNEState], None] = None,
         chunk_size: int = None, early_stop: float = None,
-        auto_rescale: float = None):
+        auto_rescale: float = None,
+        resilience: "ResiliencePolicy" = None, resume_from=None,
+        state: FuncSNEState = None, validate: bool = True):
     """End-to-end driver on the scan-chunked step. Returns (state, snapshots).
 
     ``chunk_size`` iterations run per device dispatch (§Perf H15); the host
@@ -1030,34 +1145,66 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
     one sync per chunk -- and stops once it falls below the threshold
     (the embedding has converged; the remaining chunks would only stir
     negative-sampling noise).  The returned ``state.step`` tells the
-    caller how many iterations actually ran.  NB the threshold compares
-    against the *per-chunk* EMA, which restarts from 0 each chunk and so
-    saturates at ``(1 - 0.9^chunk_size)`` of the steady-state per-step
-    displacement: at the default chunk_size=50 that factor is ~1.0, but
-    very small chunks under-read a still-moving run (chunk_size=1 reads
-    0.1x), so calibrate the threshold to the chunk size in use.  The
-    host-loop fallback evaluates the identical T=1-chunk formula
-    (``0.1 * act_disp`` per step), matching ``chunk_size=1`` exactly.
+    caller how many iterations actually ran.  The per-chunk EMA restarts
+    from 0 each chunk and saturates at ``(1 - 0.9^T)`` of the
+    steady-state per-step displacement, so the driver *normalises* it by
+    that factor before comparing: thresholds are calibrated in
+    steady-state per-step displacement units and are chunk-size
+    independent.  The host-loop fallback compares the identical quantity
+    (its per-step ``act_disp`` equals the normalised T=1 EMA), a parity
+    pinned in tests/test_chunked_driver.py.
 
     ``auto_rescale`` (off by default) is the second ChunkMetrics
     consumer -- the paper's 'implosion button' driven by telemetry: when
-    ``metrics.disp_ema`` collapses below the threshold while iterations
-    remain, the embedding has grown so large that gradient steps no
-    longer move points relative to its scale, so the driver applies
-    :func:`rescale_embedding` (shrink Y by 100x, zero the velocity) and
-    keeps optimising instead of silently freezing.  The same EMA
-    calibration note as ``early_stop`` applies.  When both are set,
-    ``early_stop`` is checked first (a stop wins over a rescale).
+    the (normalised, see above) ``metrics.disp_ema`` collapses below the
+    threshold while iterations remain, the embedding has grown so large
+    that gradient steps no longer move points relative to its scale, so
+    the driver applies :func:`rescale_embedding` (shrink Y by 100x, zero
+    the velocity) and keeps optimising instead of silently freezing.
+    When both are set, ``early_stop`` is checked first (a stop wins over
+    a rescale).
+
+    ``resilience`` (a :class:`~repro.core.resilience.ResiliencePolicy`)
+    arms the fault-tolerance layer: after every chunk the health fields
+    of :class:`ChunkMetrics` (computed inside the scan -- no extra host
+    syncs) are checked; a tripped probe rolls the state back to the last
+    healthy chunk boundary and retries with exponentially backed-off
+    lr/exaggeration, raising :class:`EmbeddingDiverged` once
+    ``max_retries`` consecutive retries fail.  With
+    ``policy.checkpoint_dir`` set, the full state is snapshotted through
+    :class:`~repro.checkpoint.Checkpointer` every ``checkpoint_every``
+    healthy chunks and ``fit(resume_from=dir)`` continues a killed run
+    bit-identically to the uninterrupted one (chunk boundaries are
+    bit-neutral, and the state carries its own RNG key and counter-RNG
+    salt inputs).  ``policy.sticky_fallback`` enables guarded Pallas
+    launches (``repro.kernels.fallback``): a raising kernel family is
+    demoted to its XLA reference for the rest of the run instead of
+    crashing it.  A :class:`~repro.runtime.straggler.StepTimeMonitor`
+    watches chunk wall times as the hang/straggler watchdog.  A clean
+    run under a policy is bit-identical to ``resilience=None`` (one
+    extra on-device state copy per chunk is the only cost -- the chunk
+    program donates its input, so rollback needs an anchor).
+
+    ``state`` continues an existing :class:`FuncSNEState` (dynamic
+    sessions: ``add_points``/``remove_points`` between ``fit`` calls)
+    instead of initialising from ``X``; ``n_iter`` then counts the
+    *additional* iterations.  NB schedules are evaluated from the global
+    ``st.step`` on device -- pass an identity schedule (or one keyed on
+    absolute steps) when continuing.
 
     A ``schedule`` is evaluated with a *traced* ``it`` inside the chunk;
     one that needs a Python ``int`` (host control flow on ``it``) is
-    detected up front and falls back to the per-step host loop.
+    detected up front and falls back to the per-step host loop (which
+    supports neither ``resilience`` nor ``resume_from`` -- a ValueError
+    says so rather than silently dropping the policy).
     """
     X = jnp.asarray(X, jnp.float32)
     if rng is None:
         rng = jax.random.PRNGKey(0)
     if cfg is None:
         cfg = FuncSNEConfig(n_points=X.shape[0], dim_hd=X.shape[1])
+    if validate:
+        validate_inputs(X, cfg)
     if hparams is None:
         hparams = default_hparams(cfg.n_points)
     if schedule is None:
@@ -1068,35 +1215,137 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         jax.eval_shape(lambda it: schedule(it, n_iter, hparams),
                        jax.ShapeDtypeStruct((), jnp.int32))
     except jax.errors.ConcretizationTypeError:
+        if resilience is not None or resume_from is not None \
+                or state is not None:
+            raise ValueError(
+                "resilience / resume_from / state require a traceable "
+                "schedule (the per-step host-loop fallback does not "
+                "support them); use a schedule evaluable with a traced "
+                "`it`")
         return _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
                               snapshot_every, callback, early_stop,
                               auto_rescale)
-    st = init_state(rng, X, cfg, init=init, perplexity=hparams.perplexity)
+    if state is not None:
+        st = state
+    else:
+        st = init_state(rng, X, cfg, init=init,
+                        perplexity=hparams.perplexity, validate=False)
+
+    policy = resilience
+    ck = monitor = None
+    start_it = 0
+    lr_scale = ex_scale = 1.0
+    if policy is not None:
+        if policy.checkpoint_dir is not None:
+            from repro.checkpoint import Checkpointer
+            ck = Checkpointer(policy.checkpoint_dir,
+                              keep_last=policy.keep_last)
+        from repro.runtime.straggler import StepTimeMonitor
+        monitor = StepTimeMonitor(z_thresh=policy.straggler_z,
+                                  hang_timeout=policy.hang_timeout,
+                                  warmup_steps=policy.straggler_warmup)
+    if resume_from is not None:
+        from repro.checkpoint import Checkpointer
+        rck = ck if (ck is not None
+                     and str(ck.dir) == str(resume_from)) else \
+            Checkpointer(resume_from)
+        tree, meta = rck.restore(st)
+        st = jax.tree.map(jnp.asarray, tree)
+        start_it = int(meta["step"])
+        lr_scale = float(meta.get("lr_scale", 1.0))
+        ex_scale = float(meta.get("ex_scale", 1.0))
+
     snapshots = []
     chunks = {}         # T -> compiled program (final ragged chunk reuses it)
-    it = 0
-    while it < n_iter:
-        T = min(chunk_size, n_iter - it)
-        if T not in chunks:
-            chunks[T] = make_chunked_step(cfg, T, schedule=schedule,
-                                          n_iter=n_iter,
-                                          snapshot_every=snapshot_every)
-        st, snaps, metrics = chunks[T](st, X, hparams)
-        if snapshot_every:
-            taken = int(metrics.n_snapshots)
-            if taken:
-                snapshots.extend(list(jax.device_get(snaps[:taken])))
-        if callback is not None:
-            callback(it + T - 1, st)
-        it += T
-        if early_stop is not None and float(metrics.disp_ema) < early_stop:
-            break
-        if auto_rescale is not None and it < n_iter \
-                and float(metrics.disp_ema) < auto_rescale:
-            # the paper's implosion button, driven by telemetry: the
-            # layout froze relative to its own scale -- shrink it so
-            # gradients matter again and keep going
-            st = rescale_embedding(st)
+    it = start_it
+    retries = 0
+    n_healthy = 0       # healthy chunks since start (checkpoint cadence)
+    fb_seen = fallback.n_events()
+    guard = fallback.enabled(policy.sticky_fallback) \
+        if policy is not None else contextlib.nullcontext()
+    with guard:
+        while it < n_iter:
+            T = min(chunk_size, n_iter - it)
+            if T not in chunks:
+                chunks[T] = make_chunked_step(cfg, T, schedule=schedule,
+                                              n_iter=n_iter,
+                                              snapshot_every=snapshot_every)
+            hp_run = _scaled_hp(hparams, lr_scale, ex_scale)
+            if policy is not None or faults.current() is not None:
+                # the chunk program donates its input; the live `st` is
+                # the rollback anchor, so dispatch a copy.  Scripted
+                # faults poison the *copy*: the anchor stays clean, as it
+                # would for a divergence that happens inside the chunk.
+                st_in = faults.corrupt_state(_copy_state(st), it)
+            else:
+                st_in = st
+            t0 = time.time()
+            st_out, snaps, metrics = chunks[T](st_in, X, hp_run)
+            if policy is not None:
+                m = jax.device_get(metrics)   # THE one host sync per chunk
+                alarm = monitor.observe(time.time() - t0)
+                if alarm is not None:
+                    policy.log("straggler", step=it, alarm=alarm)
+                for e in fallback.events(fb_seen):
+                    policy.log(**e)
+                fb_seen = fallback.n_events()
+                reason = policy.check(m)
+                if reason is not None:
+                    if retries >= policy.max_retries:
+                        policy.log("giving_up", step=it, reason=reason,
+                                   retries=retries)
+                        raise EmbeddingDiverged(it, reason, retries,
+                                                policy.events)
+                    retries += 1
+                    lr_scale *= policy.lr_backoff
+                    ex_scale *= policy.exaggeration_backoff
+                    policy.log("rollback", step=it, reason=reason,
+                               retry=retries, lr_scale=lr_scale,
+                               ex_scale=ex_scale)
+                    continue    # `st` still holds the last healthy state
+                retries = 0
+            else:
+                m = metrics
+            st = st_out
+            if snapshot_every:
+                taken = int(m.n_snapshots)
+                if taken:
+                    snapshots.extend(list(jax.device_get(snaps[:taken])))
+            if callback is not None:
+                callback(it + T - 1, st)
+            it += T
+            if policy is not None:
+                n_healthy += 1
+                if ck is not None \
+                        and n_healthy % policy.checkpoint_every == 0:
+                    ck.save(it, st, metadata={"lr_scale": lr_scale,
+                                              "ex_scale": ex_scale})
+            try:
+                faults.maybe_preempt(it)     # simulated kill between chunks
+            except Exception:
+                # a real preemption grace period lets in-flight I/O land;
+                # give the async checkpoint write the same courtesy so the
+                # just-saved boundary is committed for resume
+                if ck is not None:
+                    with contextlib.suppress(Exception):
+                        ck.wait()
+                raise
+            # normalise the per-chunk EMA by its saturation factor so the
+            # threshold reads in steady-state per-step displacement units
+            # whatever the chunk size (host loop parity: T=1 factor is
+            # exactly the 0.1 single-step weight)
+            if early_stop is not None or auto_rescale is not None:
+                disp = float(m.disp_ema) / (1.0 - _METRICS_DECAY ** T)
+                if early_stop is not None and disp < early_stop:
+                    break
+                if auto_rescale is not None and it < n_iter \
+                        and disp < auto_rescale:
+                    # the paper's implosion button, driven by telemetry:
+                    # the layout froze relative to its own scale --
+                    # shrink it so gradients matter again and keep going
+                    st = rescale_embedding(st)
+    if ck is not None:
+        ck.wait()       # surface async checkpoint-write failures
     return st, snapshots
 
 
@@ -1115,17 +1364,19 @@ def _fit_host_loop(X, cfg, n_iter, rng, hparams, schedule, init,
         if callback is not None:
             callback(it, st)
         if early_stop is not None or auto_rescale is not None:
-            # exactly the chunk body's ChunkMetrics.disp_ema at T=1: the
-            # per-chunk EMA restarts from 0, so one step reads 0.1x the
-            # step displacement -- this loop IS the chunk_size=1 case
+            # the same quantity `fit` derives from ChunkMetrics: its
+            # per-chunk disp_ema normalised by the (1 - 0.9^T) saturation
+            # factor is, at T=1, exactly this per-step displacement --
+            # thresholds read in the same units on both drivers (parity
+            # pinned in tests/test_chunked_driver.py)
             n_act = max(float(jnp.sum(st.active.astype(jnp.float32))), 1.0)
             act_disp = float(jnp.sum(
                 jnp.abs(st.vel) * st.active[:, None].astype(jnp.float32))) \
                 / (n_act * cfg.dim_ld)
-            if early_stop is not None and 0.1 * act_disp < early_stop:
+            if early_stop is not None and act_disp < early_stop:
                 break
             if auto_rescale is not None and it + 1 < n_iter \
-                    and 0.1 * act_disp < auto_rescale:
+                    and act_disp < auto_rescale:
                 st = rescale_embedding(st)
     return st, snapshots
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fallback
 from repro.kernels.knn_merge.kernel import (knn_merge_cand_pallas,
                                             knn_merge_pallas)
 from repro.kernels.knn_merge.ref import knn_merge_cand_ref, knn_merge_ref
@@ -86,27 +87,40 @@ def knn_merge(x, qid, cur_idx, cur_d, cand=None, *, cand_active=None,
         # zero-width sources are dropped up front so the static layout the
         # kernel specialises on matches the ref's concatenation exactly
         sources = tuple(s for s in sources if s[-1] > 0)
-        if backend == "xla":
+
+        def run_ref():
             return knn_merge_cand_ref(
                 x, qid, cur_idx, cur_d, salt=salt, sources=sources,
                 first_tables=first_tables, second_tables=second_tables,
                 extra=cand, active=active, cur_valid=cur_valid)
+
+        if backend == "xla":
+            return run_ref()
         if backend in ("pallas", "interpret"):
             cur_w = cur_valid if rescore else cur_d
-            return knn_merge_cand_pallas(
-                x, qid, cur_idx, cur_w, salt, first_tables, second_tables,
-                cand, active, sources=sources, rescore=rescore,
-                interpret=(backend == "interpret"))
+            return fallback.guarded(
+                "knn_merge",
+                lambda: knn_merge_cand_pallas(
+                    x, qid, cur_idx, cur_w, salt, first_tables,
+                    second_tables, cand, active, sources=sources,
+                    rescore=rescore, interpret=(backend == "interpret")),
+                run_ref)
         raise ValueError(f"unknown backend {backend!r}")
 
-    if backend == "xla":
+    def run_ref():
         return knn_merge_ref(x, qid, cur_idx, cur_d, cand,
                              cand_active=cand_active, cur_valid=cur_valid)
+
+    if backend == "xla":
+        return run_ref()
     if backend in ("pallas", "interpret"):
-        if cand_active is None:
-            cand_active = jnp.ones(cand.shape, bool)
+        ca = cand_active if cand_active is not None \
+            else jnp.ones(cand.shape, bool)
         cur_w = cur_valid if rescore else cur_d
-        return knn_merge_pallas(x, qid, cur_idx, cur_w, cand, cand_active,
-                                rescore=rescore,
-                                interpret=(backend == "interpret"))
+        return fallback.guarded(
+            "knn_merge",
+            lambda: knn_merge_pallas(x, qid, cur_idx, cur_w, cand, ca,
+                                     rescore=rescore,
+                                     interpret=(backend == "interpret")),
+            run_ref)
     raise ValueError(f"unknown backend {backend!r}")

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import fallback
 from repro.kernels.ne_forces.kernel import (ne_forces_gather_pallas,
                                             ne_forces_pallas,
                                             ne_forces_scatter_pallas)
@@ -55,10 +56,12 @@ def ne_forces(y, nbr, coef, alpha, *, mode: str, backend: str = "auto"):
     """Fused variable-tail force evaluation; see ref.py for semantics."""
     if backend == "auto":
         backend = _default_backend()
-    if backend == "pallas":
-        return ne_forces_pallas(y, nbr, coef, alpha, mode=mode)
-    if backend == "interpret":
-        return ne_forces_pallas(y, nbr, coef, alpha, mode=mode, interpret=True)
+    if backend in ("pallas", "interpret"):
+        return fallback.guarded(
+            "ne_forces",
+            lambda: ne_forces_pallas(y, nbr, coef, alpha, mode=mode,
+                                     interpret=backend == "interpret"),
+            lambda: ne_forces_ref(y, nbr, coef, alpha, mode=mode))
     if backend == "xla":
         return ne_forces_ref(y, nbr, coef, alpha, mode=mode)
     raise ValueError(f"unknown backend {backend!r}")
@@ -97,35 +100,43 @@ def ne_forces_gather(x, qid, nbr_idx, coef, alpha, *, segments,
             scatter_back = tuple(bool(b) for b in scatter_back)
         chunk_n = scatter_chunk_plan(x.shape[0], x.shape[1], len(segments))
         if backend in ("pallas", "interpret") and chunk_n is None:
+            # degenerate VMEM plan: the XLA segment-sum ref answers this
+            # shape; logged once on the telemetry channel (non-sticky --
+            # other shapes may still plan fine)
+            fallback.note("ne_forces",
+                          f"scatter chunk plan degenerate at n={x.shape[0]} "
+                          f"d={x.shape[1]} S={len(segments)}; XLA ref")
             backend = "xla"
-        if backend == "pallas":
-            return ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha,
-                                            segments=segments,
-                                            scatter_back=scatter_back,
-                                            chunk_n=chunk_n)
-        if backend == "interpret":
-            return ne_forces_scatter_pallas(x, qid, nbr_idx, coef, alpha,
-                                            segments=segments,
-                                            scatter_back=scatter_back,
-                                            chunk_n=chunk_n,
-                                            interpret=True)
-        if backend == "xla":
+
+        def run_scatter_ref():
             return ne_forces_scatter_ref(x, qid, nbr_idx, coef, alpha,
                                          segments=segments,
                                          scatter_back=scatter_back)
+
+        if backend in ("pallas", "interpret"):
+            return fallback.guarded(
+                "ne_forces",
+                lambda: ne_forces_scatter_pallas(
+                    x, qid, nbr_idx, coef, alpha, segments=segments,
+                    scatter_back=scatter_back, chunk_n=chunk_n,
+                    interpret=backend == "interpret"),
+                run_scatter_ref)
+        if backend == "xla":
+            return run_scatter_ref()
         raise ValueError(f"unknown backend {backend!r}")
     assert scatter_back is None, "scatter_back is a scatter_fused option"
     if emit_edges is not None:
         emit_edges = tuple(bool(e) for e in emit_edges)
-    if backend == "pallas":
-        return ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha,
-                                       segments=segments,
-                                       emit_edges=emit_edges)
-    if backend == "interpret":
-        return ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha,
-                                       segments=segments,
-                                       emit_edges=emit_edges,
-                                       interpret=True)
+    if backend in ("pallas", "interpret"):
+        return fallback.guarded(
+            "ne_forces",
+            lambda: ne_forces_gather_pallas(x, qid, nbr_idx, coef, alpha,
+                                            segments=segments,
+                                            emit_edges=emit_edges,
+                                            interpret=backend == "interpret"),
+            lambda: ne_forces_gather_ref(x, qid, nbr_idx, coef, alpha,
+                                         segments=segments,
+                                         emit_edges=emit_edges))
     if backend == "xla":
         return ne_forces_gather_ref(x, qid, nbr_idx, coef, alpha,
                                     segments=segments,

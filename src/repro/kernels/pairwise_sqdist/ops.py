@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import fallback
 from repro.kernels.pairwise_sqdist.kernel import (
     pairwise_sqdist_gather_pallas, pairwise_sqdist_pallas)
 from repro.kernels.pairwise_sqdist.ref import (
@@ -28,10 +29,12 @@ def pairwise_sqdist(q, c, *, backend: str = "auto"):
     """Squared distances between queries (B, M) and candidates (B, C, M)."""
     if backend == "auto":
         backend = _default_backend()
-    if backend == "pallas":
-        return pairwise_sqdist_pallas(q, c)
-    if backend == "interpret":
-        return pairwise_sqdist_pallas(q, c, interpret=True)
+    if backend in ("pallas", "interpret"):
+        return fallback.guarded(
+            "pairwise_sqdist",
+            lambda: pairwise_sqdist_pallas(q, c,
+                                           interpret=backend == "interpret"),
+            lambda: pairwise_sqdist_ref(q, c))
     if backend == "xla":
         return pairwise_sqdist_ref(q, c)
     raise ValueError(f"unknown backend {backend!r}")
@@ -47,10 +50,12 @@ def pairwise_sqdist_gather(x, qid, cand, *, backend: str = "auto"):
     """
     if backend == "auto":
         backend = _default_backend()
-    if backend == "pallas":
-        return pairwise_sqdist_gather_pallas(x, qid, cand)
-    if backend == "interpret":
-        return pairwise_sqdist_gather_pallas(x, qid, cand, interpret=True)
+    if backend in ("pallas", "interpret"):
+        return fallback.guarded(
+            "pairwise_sqdist",
+            lambda: pairwise_sqdist_gather_pallas(
+                x, qid, cand, interpret=backend == "interpret"),
+            lambda: pairwise_sqdist_gather_ref(x, qid, cand))
     if backend == "xla":
         return pairwise_sqdist_gather_ref(x, qid, cand)
     raise ValueError(f"unknown backend {backend!r}")

@@ -154,3 +154,64 @@ def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
     ck.save(5, _tree(), blocking=True)
     assert not list(tmp_path.glob(".tmp-*"))
     assert ck.latest_step() == 5
+
+
+def _broken_savez(monkeypatch):
+    import repro.checkpoint.checkpointer as ckm
+
+    def boom(*a, **kw):
+        raise OSError("disk full (injected)")
+
+    monkeypatch.setattr(ckm.np, "savez", boom)
+
+
+def test_checkpoint_blocking_save_raises_immediately(tmp_path, monkeypatch):
+    ck = Checkpointer(tmp_path)
+    _broken_savez(monkeypatch)
+    with pytest.raises(OSError, match="disk full"):
+        ck.save(1, _tree(), blocking=True)
+    # the error was delivered, not left armed for the next caller
+    assert ck.last_error is None
+
+
+def test_checkpoint_async_save_error_surfaces_on_wait(tmp_path, monkeypatch):
+    ck = Checkpointer(tmp_path)
+    _broken_savez(monkeypatch)
+    ck.save(1, _tree())
+    with pytest.raises(OSError, match="disk full"):
+        ck.wait()
+    assert ck.last_error is None
+
+
+def test_checkpoint_async_save_error_surfaces_on_next_save(tmp_path,
+                                                           monkeypatch):
+    ck = Checkpointer(tmp_path)
+    _broken_savez(monkeypatch)
+    ck.save(1, _tree())
+    ck._thread.join()                     # error is parked in last_error
+    with pytest.raises(OSError, match="disk full"):
+        ck.save(2, _tree())               # save() waits on the prior write
+
+
+def test_checkpoint_funcsne_state_roundtrip_bitwise(tmp_path):
+    """The resilience contract: a FuncSNEState (embedding, KNN tables,
+    RNG key, reverse-edge cache) survives save/restore bit-for-bit."""
+    from repro.core import funcsne
+
+    n, dim = 24, 4
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    cfg = funcsne.FuncSNEConfig(n_points=n, dim_hd=dim, k_hd=8, k_ld=4,
+                                n_negatives=4, c_hd_rev=2, backend="xla")
+    st = funcsne.init_state(jax.random.PRNGKey(1), X, cfg)
+    step = jax.jit(lambda s: funcsne.funcsne_step(cfg, s, X,
+                                                  funcsne.default_hparams(n)))
+    for _ in range(3):                    # populate rev_idx and EMAs
+        st = step(st)
+    ck = Checkpointer(tmp_path)
+    ck.save(3, st, blocking=True)
+    got, meta = ck.restore(jax.tree.map(jnp.zeros_like, st))
+    assert meta["step"] == 3
+    for name, a, b in zip(st._fields, st, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"field {name!r}")
