@@ -1,16 +1,23 @@
-"""Fault-tolerant checkpointing: async, atomic, elastic.
+"""Fault-tolerant checkpointing: async, atomic, elastic, multi-host.
 
 Design (single-host container standing in for a multi-host pod):
   - save(): device_get the pytree off the step path (async thread by
     default), write one .npz per checkpoint with path-flattened keys, commit
-    atomically via tmp-dir rename.  On a real pod each host writes only its
-    addressable shards (`host_shard_filter`); here that set is all shards.
-  - restore(): load latest (or a given) step; ``device_put`` with the
-    *target* mesh's NamedShardings -- a checkpoint written on a 512-chip
-    mesh restores onto 256 chips (elastic re-sharding) because arrays are
-    stored unsharded and re-laid-out on load.
-  - keep_last: old committed checkpoints are pruned.
+    atomically via tmp-dir rename.  On a pod each host writes ONLY its own
+    shard file (``host_shard_filter`` + ``host_id``/``n_hosts``): parts are
+    staged under the shared tmp dir and the host that completes the set
+    commits, so checkpoint I/O scales with hosts instead of funnelling
+    through one.
+  - restore(): load latest (or a given) step, merging per-host shard files
+    by row offset; ``device_put`` with the *target* mesh's NamedShardings
+    -- a checkpoint written on a 512-chip mesh restores onto 256 chips
+    (elastic re-sharding) because arrays are stored unsharded (or as
+    host-row slices that merge to unsharded) and re-laid-out on load.
+  - keep_last: old committed checkpoints are pruned (0 keeps nothing).
   - metadata (step, data cursor, RNG, hyperparams) rides along as JSON.
+  - error surfacing: an async write failure raises on the next ``wait()``
+    or ``save()``; ``close()`` (and ``__del__``) *warn* on an error nobody
+    ever observed, so the final checkpoint of a run cannot vanish silently.
 
 QTensor (int8 optimiser moments) leaves flatten into q/scale arrays like
 any other pytree node.
@@ -22,13 +29,15 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 _SEP = "||"
+_ROWS = "@rows"     # key suffix marking a host-sliced leaf: key||@rows<start>
 
 
 def _flatten(tree) -> dict:
@@ -51,6 +60,21 @@ def _unflatten_into(tree, flat: dict):
         jax.tree_util.tree_structure(tree), out)
 
 
+def row_shard_filter(host_id: int, n_hosts: int, n_rows: int) -> Callable:
+    """Standard per-host filter: host ``h`` persists rows
+    ``[h*n/H, (h+1)*n/H)`` of every leaf whose leading dim is ``n_rows``;
+    host 0 additionally persists every other (replicated / scalar) leaf.
+    Feed the result to :meth:`Checkpointer.save` as ``host_shard_filter``.
+    """
+    def filt(key: str, arr: np.ndarray):
+        if arr.ndim >= 1 and arr.shape[0] == n_rows:
+            lo = host_id * n_rows // n_hosts
+            hi = (host_id + 1) * n_rows // n_hosts
+            return lo, arr[lo:hi]
+        return (None, arr) if host_id == 0 else None
+    return filt
+
+
 class Checkpointer:
     def __init__(self, directory, keep_last: int = 3):
         self.dir = Path(directory)
@@ -62,21 +86,61 @@ class Checkpointer:
     # -- save ------------------------------------------------------------
 
     def save(self, step: int, tree: Any, metadata: dict = None,
-             blocking: bool = False):
-        """Snapshot is taken synchronously (device_get); I/O is async."""
+             blocking: bool = False, host_shard_filter: Callable = None,
+             host_id: int = 0, n_hosts: int = 1):
+        """Snapshot is taken synchronously (device_get); I/O is async.
+
+        ``host_shard_filter(key, array)`` selects what THIS host writes:
+        ``None`` skips the leaf (another host owns it), ``(None, arr)``
+        writes it whole, ``(start, rows)`` writes a row slice merged back
+        by offset on restore (see :func:`row_shard_filter`).  With
+        ``n_hosts > 1`` each host stages ``shard<h>-of-<H>.npz`` under
+        the shared tmp dir and the host completing the set commits; a
+        step directory is therefore only ever visible fully merged.
+        """
         self.wait()
         host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
         meta = dict(metadata or {})
         meta["step"] = int(step)
         meta["time"] = time.time()
+        meta["n_hosts"] = int(n_hosts)
+
+        flat = {}
+        for key, arr in _flatten(host_tree).items():
+            if host_shard_filter is None:
+                flat[key] = arr
+                continue
+            picked = host_shard_filter(key, arr)
+            if picked is None:
+                continue
+            start, part = picked
+            if start is None:
+                flat[key] = part
+            else:
+                flat[f"{key}{_SEP}{_ROWS}{int(start)}"] = part
 
         def write():
             try:
                 tmp = self.dir / f".tmp-{step}"
-                if tmp.exists():
-                    shutil.rmtree(tmp)
-                tmp.mkdir(parents=True)
-                np.savez(tmp / "arrays.npz", **_flatten(host_tree))
+                if n_hosts == 1:
+                    if tmp.exists():
+                        shutil.rmtree(tmp)
+                    tmp.mkdir(parents=True)
+                    np.savez(tmp / "arrays.npz", **flat)
+                else:
+                    # multi-writer staging: parts land independently,
+                    # the completing host commits
+                    tmp.mkdir(parents=True, exist_ok=True)
+                    part = tmp / f"shard{host_id:03d}-of-{n_hosts:03d}.npz"
+                    part_tmp = part.with_suffix(".npz.tmp")
+                    # write through a handle: np.savez(path) appends
+                    # ".npz" to names missing it, breaking the rename
+                    with open(part_tmp, "wb") as fh:
+                        np.savez(fh, **flat)
+                    os.replace(part_tmp, part)
+                    if len(list(tmp.glob(f"shard*-of-{n_hosts:03d}.npz"))) \
+                            < n_hosts:
+                        return          # another host completes the set
                 (tmp / "meta.json").write_text(json.dumps(meta))
                 final = self.dir / f"step_{step:010d}"
                 if final.exists():
@@ -103,9 +167,41 @@ class Checkpointer:
             err, self.last_error = self.last_error, None
             raise err
 
+    def close(self):
+        """Join any in-flight write; WARN (never raise) on an error that
+        no ``wait()`` ever observed.  Safe on error-handling paths where
+        raising would mask the in-flight exception."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            warnings.warn(
+                f"[checkpoint] async write under {self.dir} failed and the "
+                f"error was never observed by wait(): {err!r} -- the last "
+                f"checkpoint of this run may be missing", RuntimeWarning,
+                stacklevel=2)
+
+    def __del__(self):
+        # a Checkpointer dropped with a pending failure must not take the
+        # evidence with it; never join/raise during interpreter teardown
+        err = getattr(self, "last_error", None)
+        if err is not None:
+            self.last_error = None      # deliver once
+            try:
+                warnings.warn(
+                    f"[checkpoint] Checkpointer({self.dir}) garbage-"
+                    f"collected with an unobserved write error: {err!r}",
+                    RuntimeWarning, stacklevel=2)
+            except Exception:       # pragma: no cover - teardown races
+                pass
+
     def _prune(self):
         steps = self.all_steps()
-        for s in steps[:-self.keep_last]:
+        # keep_last=0 keeps NOTHING: guard the [:-0] empty slice that
+        # would silently keep everything
+        drop = steps if self.keep_last <= 0 else steps[:-self.keep_last]
+        for s in drop:
             shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
 
     # -- restore ---------------------------------------------------------
@@ -118,16 +214,41 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_merged(self, d: Path) -> dict:
+        """Load one committed step dir, merging per-host shard files:
+        plain keys load as-is, ``key||@rows<start>`` slices concat by
+        offset.  The single-host ``arrays.npz`` layout is the n_hosts=1
+        special case of the same reader."""
+        files = sorted(d.glob("shard*-of-*.npz"))
+        if not files:
+            files = [d / "arrays.npz"]
+        flat, sliced = {}, {}
+        for f in files:
+            with np.load(f, allow_pickle=False) as z:
+                for key in z.files:
+                    if _SEP + _ROWS in key:
+                        base, _, start = key.rpartition(_SEP + _ROWS)
+                        sliced.setdefault(base, []).append(
+                            (int(start), z[key]))
+                    else:
+                        flat[key] = z[key]
+        for base, parts in sliced.items():
+            parts.sort(key=lambda p: p[0])
+            flat[base] = np.concatenate([a for _, a in parts], axis=0) \
+                if len(parts) > 1 else parts[0][1]
+        return flat
+
     def restore(self, like_tree: Any, step: Optional[int] = None,
                 shardings: Any = None):
         """Returns (tree, metadata).  ``shardings``: optional NamedSharding
-        tree for the *target* mesh (elastic re-shard on load)."""
+        tree for the *target* mesh (elastic re-shard on load -- the mesh
+        may be smaller than the one that wrote the checkpoint)."""
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = self.dir / f"step_{step:010d}"
-        flat = dict(np.load(d / "arrays.npz", allow_pickle=False))
+        flat = self._load_merged(d)
         meta = json.loads((d / "meta.json").read_text())
         tree = _unflatten_into(like_tree, flat)
         tree = jax.tree.map(

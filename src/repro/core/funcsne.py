@@ -942,7 +942,7 @@ _METRICS_DECAY = 0.9
 def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
               snapshot_every: int = 0, ctx: AxisCtx = AxisCtx(),
               metrics_decay: float = _METRICS_DECAY,
-              health_metrics: bool = True):
+              health_metrics: bool = True, health_reduce: bool = True):
     """Traced chunk body: ``(st, X, hp) -> (st, snaps, ChunkMetrics)``.
 
     Runs ``T`` iterations of :func:`funcsne_step` inside ONE
@@ -968,6 +968,21 @@ def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
         A/B knob behind the ``fig8_health_*`` bench rows).  The scalars
         ride in the one ChunkMetrics sync, so the resilience layer's
         fault detection adds no host round-trips.
+
+    Mesh semantics (``health_reduce``, default True): on a mesh each
+    shard probes ONLY its own row slice of ``Y`` (the rows whose updates
+    it computed) and the per-shard scalars are reduced across
+    ``ctx.all_rows`` once per chunk -- ``min`` over ``finite_frac``,
+    ``max`` over ``y_max_abs``, earliest ``bad_step`` -- so a NaN
+    confined to ONE shard's replica trips the *global* probe.  The
+    reduction is three scalar collectives per chunk (not per step) and
+    zero extra host syncs.  ``health_reduce=False`` keeps the legacy
+    shard-blind per-replica computation: every shard probes its full
+    local copy of ``Y`` and the coordinator reads shard 0's value only
+    -- a device-local corruption on any other shard (a bad HBM row, a
+    miscompiled kernel, an injected ``faults.NaNChunk(shard=...)``) is
+    committed silently.  Kept as the positive-control anchor for the
+    regression tests; never use it in production.
     """
     assert T >= 1, T
     if schedule is not None and n_iter is None:
@@ -975,6 +990,9 @@ def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
     n, d = cfg.n_points, cfg.dim_ld
     # worst-case dues per chunk at any chunk<->snapshot alignment
     n_snap = (T // snapshot_every + 1) if snapshot_every else 0
+    # mesh-reduced health: each shard probes its own row slice, the
+    # scalars pmin/pmax across the mesh after the scan
+    health_axes = ctx.all_rows if health_reduce else None
 
     def chunk(st: FuncSNEState, X, hp: HParams):
         snaps0 = jnp.zeros((n_snap, n, d), jnp.float32)
@@ -993,11 +1011,29 @@ def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
                 # O(n*K*d) force phase, and entirely inside the scan:
                 # zero extra host syncs, zero extra dispatches
                 ff_min, ymax, bad = health
-                finite = jnp.isfinite(st.Y)
-                ff = jnp.sum(finite.astype(jnp.float32) * act_col) \
-                    / jnp.maximum(n_act * d, 1.0)
+                if health_axes is not None:
+                    # probe ONLY this shard's row slice of its replica:
+                    # the rows whose updates this device computed.  A
+                    # corruption local to one device is visible in its
+                    # own slice before any collective can launder (or
+                    # propagate) it -- the pmin/pmax after the scan
+                    # makes that local observation global.
+                    h_start, h_loc = _phase_rows(n, health_axes)
+                    Y_h = jax.lax.dynamic_slice_in_dim(st.Y, h_start, h_loc)
+                    a_h = jax.lax.dynamic_slice_in_dim(st.active, h_start,
+                                                       h_loc)
+                else:
+                    Y_h, a_h = st.Y, st.active
+                a_col = a_h[:, None].astype(jnp.float32)
+                na_h = jnp.sum(a_h.astype(jnp.float32))
+                finite = jnp.isfinite(Y_h)
+                ff = jnp.sum(finite.astype(jnp.float32) * a_col) \
+                    / jnp.maximum(na_h * d, 1.0)
+                # a shard with no active rows is vacuously healthy (it
+                # must not pmin a 0/…=0 fraction into the global probe)
+                ff = jnp.where(na_h > 0, ff, jnp.float32(1.0))
                 step_max = jnp.max(jnp.where(
-                    finite & (act_col > 0), jnp.abs(st.Y), 0.0))
+                    finite & (a_col > 0), jnp.abs(Y_h), 0.0))
                 bad = jnp.where((bad < 0) & (ff < 1.0), st.step - 1, bad)
                 health = (jnp.minimum(ff_min, ff),
                           jnp.maximum(ymax, step_max), bad)
@@ -1014,10 +1050,22 @@ def _chunk_fn(cfg: FuncSNEConfig, T: int, *, schedule=None, n_iter=None,
         (st, snaps, k, disp, health), _ = jax.lax.scan(
             body, (st, snaps0, jnp.int32(0), jnp.float32(0.0), health0),
             None, length=T)
+        ff_min, ymax, bad = health
+        if health_metrics and health_axes is not None:
+            # one reduction per CHUNK (min/max folds commute with the
+            # per-step folds above, so reducing after the scan equals
+            # reducing every step): three scalar collectives, zero extra
+            # host syncs -- one bad shard now trips the GLOBAL probe.
+            ff_min = jax.lax.pmin(ff_min, health_axes)
+            ymax = jax.lax.pmax(ymax, health_axes)
+            # earliest trip across shards; -1 (none) encodes as +inf-like
+            no_bad = jnp.int32(jnp.iinfo(jnp.int32).max)
+            bad = jax.lax.pmin(jnp.where(bad < 0, no_bad, bad), health_axes)
+            bad = jnp.where(bad == no_bad, jnp.int32(-1), bad)
         metrics = ChunkMetrics(step=st.step, n_snapshots=k, disp_ema=disp,
                                zhat=st.zhat, ema_new_frac=st.ema_new_frac,
-                               finite_frac=health[0], y_max_abs=health[1],
-                               bad_step=health[2])
+                               finite_frac=ff_min, y_max_abs=ymax,
+                               bad_step=bad)
         return st, snaps, metrics
 
     return chunk
@@ -1042,7 +1090,9 @@ def make_chunked_step(cfg: FuncSNEConfig, T: int, *, schedule=None,
 def make_distributed_step(cfg: FuncSNEConfig, mesh, *,
                           points_axes=("data",), feat_axis="model",
                           chunk: int = None, schedule=None, n_iter=None,
-                          snapshot_every: int = 0):
+                          snapshot_every: int = 0,
+                          health_metrics: bool = True,
+                          health_reduce: bool = True):
     """shard_map'd step for a production mesh (see module docstring).
 
     ``chunk=None`` keeps the classic one-step contract
@@ -1052,6 +1102,15 @@ def make_distributed_step(cfg: FuncSNEConfig, mesh, *,
     sequential distributed steps -- the chunk body is the same traced
     ``funcsne_step``, so the psum/all-gather schedule per iteration is
     unchanged and only the dispatch + host-sync cost is amortised.
+
+    The chunked form's health telemetry is mesh-reduced by default
+    (``health_reduce=True``): each shard probes its own row slice and
+    ``finite_frac`` / ``y_max_abs`` / ``bad_step`` are pmin/pmax'd
+    across the mesh once per chunk, so the ChunkMetrics any host reads
+    reflect EVERY shard -- a NaN confined to one device's replica trips
+    the global rollback.  ``health_reduce=False`` restores the legacy
+    shard-blind per-replica probe (positive-control anchor for tests
+    only; see :func:`_chunk_fn`).
     """
     ctx = AxisCtx(points=tuple(points_axes), feat=feat_axis)
     state_specs = FuncSNEState(*([P()] * len(FuncSNEState._fields)))
@@ -1067,7 +1126,9 @@ def make_distributed_step(cfg: FuncSNEConfig, mesh, *,
         return jax.jit(fn, donate_argnums=(0,)), ctx
 
     body = _chunk_fn(cfg, chunk, schedule=schedule, n_iter=n_iter,
-                     snapshot_every=snapshot_every, ctx=ctx)
+                     snapshot_every=snapshot_every, ctx=ctx,
+                     health_metrics=health_metrics,
+                     health_reduce=health_reduce)
     out_specs = (state_specs, P(),
                  ChunkMetrics(*([P()] * len(ChunkMetrics._fields))))
     fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
@@ -1185,6 +1246,33 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
     extra on-device state copy per chunk is the only cost -- the chunk
     program donates its input, so rollback needs an anchor).
 
+    Distributed-resilience matrix -- which policy knobs are mesh-aware.
+    This ``fit`` drives a single process; the multi-host elastic loop on
+    the same policy is :func:`repro.runtime.coordinator.fit_elastic`:
+
+      ``min_finite_frac`` / ``max_abs_y``
+          mesh-aware: under ``make_distributed_step(chunk=T)`` the
+          telemetry is pmin/pmax-reduced across every shard before any
+          host reads it (``health_reduce=True``), so one bad shard
+          trips the global rollback.
+      rollback / ``lr_backoff`` / ``max_retries``
+          mesh-aware: the anchor copy is replicated on the mesh and the
+          retry re-dispatches the same chunk program on all shards.
+      ``checkpoint_dir`` / ``checkpoint_every`` / ``keep_last``
+          mesh-aware: the coordinator writes per-host shard files
+          (``Checkpointer.save(host_shard_filter=...)``, merged on
+          restore) so checkpoint I/O scales with hosts; this ``fit``
+          writes the single-host layout.
+      ``resume_from``
+          mesh-aware AND elastic: ``Checkpointer.restore(shardings=)``
+          re-lays a checkpoint onto whatever mesh survives.
+      ``sticky_fallback``
+          process-local: the demotion registry is per process; each
+          host demotes (and logs) independently.
+      ``hang_timeout`` / ``straggler_z``
+          coordinator-local: chunk wall time is observed where the
+          dispatch happens.
+
     ``state`` continues an existing :class:`FuncSNEState` (dynamic
     sessions: ``add_points``/``remove_points`` between ``fit`` calls)
     instead of initialising from ``X``; ``n_iter`` then counts the
@@ -1263,7 +1351,15 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
     fb_seen = fallback.n_events()
     guard = fallback.enabled(policy.sticky_fallback) \
         if policy is not None else contextlib.nullcontext()
-    with guard:
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(guard)
+        if ck is not None:
+            # every exit path -- EmbeddingDiverged, Preempted, a raising
+            # callback -- joins the in-flight async write so the last
+            # boundary is committed on disk for resume; close() warns on
+            # an unobserved write error instead of masking the in-flight
+            # exception (the happy path surfaces it via wait() below)
+            stack.callback(ck.close)
         while it < n_iter:
             T = min(chunk_size, n_iter - it)
             if T not in chunks:
@@ -1320,16 +1416,11 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
                         and n_healthy % policy.checkpoint_every == 0:
                     ck.save(it, st, metadata={"lr_scale": lr_scale,
                                               "ex_scale": ex_scale})
-            try:
-                faults.maybe_preempt(it)     # simulated kill between chunks
-            except Exception:
-                # a real preemption grace period lets in-flight I/O land;
-                # give the async checkpoint write the same courtesy so the
-                # just-saved boundary is committed for resume
-                if ck is not None:
-                    with contextlib.suppress(Exception):
-                        ck.wait()
-                raise
+            # simulated kill between chunks; the ExitStack's ck.close()
+            # is the preemption grace period that lets the in-flight
+            # checkpoint write land, so the just-saved boundary is
+            # committed for resume
+            faults.maybe_preempt(it)
             # normalise the per-chunk EMA by its saturation factor so the
             # threshold reads in steady-state per-step displacement units
             # whatever the chunk size (host loop parity: T=1 factor is
@@ -1344,8 +1435,10 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
                     # the layout froze relative to its own scale --
                     # shrink it so gradients matter again and keep going
                     st = rescale_embedding(st)
-    if ck is not None:
-        ck.wait()       # surface async checkpoint-write failures
+        if ck is not None:
+            ck.wait()   # surface async write failures BEFORE returning:
+            #             the final checkpoint of a run must not vanish
+            #             silently (close() above only warns)
     return st, snapshots
 
 

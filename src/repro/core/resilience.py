@@ -21,6 +21,17 @@ The device-side half lives in ``funcsne._chunk_fn`` (finite-fraction /
 max-|Y| / first-bad-step scalars folded into the chunk scan) and
 ``repro.kernels.fallback`` (sticky demotion registry); the deterministic
 fault sources used by tests and CI live in ``repro.runtime.faults``.
+
+On a mesh the same contract holds shard-globally: the chunk program
+pmin/pmax-reduces the health scalars across every shard before the host
+reads them (``health_reduce=True`` in ``make_distributed_step``), so
+:meth:`ResiliencePolicy.check` sees the WORST shard's telemetry and a
+NaN confined to one device's replica trips the global rollback.  The
+policy code is identical either way -- it only ever consumes the one
+ChunkMetrics tuple -- which is what lets
+``repro.runtime.coordinator.fit_elastic`` reuse it unchanged for the
+multi-host elastic loop (per-host checkpoint shards, remesh-and-resume
+on host loss).
 """
 from __future__ import annotations
 

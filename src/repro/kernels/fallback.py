@@ -31,6 +31,12 @@ from typing import Callable, Dict, List
 
 from repro.runtime import faults
 
+# Lock discipline: EVERY access to the module registries below -- reads
+# included -- happens under _LOCK (async checkpoint writers and the
+# chunk dispatch thread consult this module concurrently; a reader
+# iterating _EVENTS while a writer appends is a race even under the
+# GIL's best behaviour).  The lock is never held across a kernel launch:
+# guarded() snapshots what it needs, releases, then runs.
 _LOCK = threading.Lock()
 _ENABLED = False
 _DEMOTED: Dict[str, str] = {}       # family -> reason
@@ -39,7 +45,8 @@ _NOTED: set = set()                 # dedup key of already-logged notes
 
 
 def is_enabled() -> bool:
-    return _ENABLED
+    with _LOCK:
+        return _ENABLED
 
 
 @contextlib.contextmanager
@@ -69,11 +76,13 @@ def demote(family: str, reason) -> None:
 
 
 def is_demoted(family: str) -> bool:
-    return family in _DEMOTED
+    with _LOCK:
+        return family in _DEMOTED
 
 
 def demotions() -> Dict[str, str]:
-    return dict(_DEMOTED)
+    with _LOCK:
+        return dict(_DEMOTED)
 
 
 def note(family: str, reason: str) -> None:
@@ -89,11 +98,13 @@ def note(family: str, reason: str) -> None:
 
 
 def events(since: int = 0) -> List[dict]:
-    return list(_EVENTS[since:])
+    with _LOCK:
+        return list(_EVENTS[since:])
 
 
 def n_events() -> int:
-    return len(_EVENTS)
+    with _LOCK:
+        return len(_EVENTS)
 
 
 def reset() -> None:
@@ -115,7 +126,7 @@ def guarded(family: str, run_pallas: Callable[[], object],
     (``repro.runtime.faults``) and real launch/lowering exceptions demote
     the family and the XLA ref answers this call and every later one.
     """
-    if not _ENABLED:
+    if not is_enabled():
         return run_pallas()
     if is_demoted(family):
         return run_xla()

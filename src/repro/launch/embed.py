@@ -51,6 +51,20 @@ def main():
     ap.add_argument("--perplexity", type=float, default=20.0)
     ap.add_argument("--dim-ld", type=int, default=2)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--devices", type=int, default=1,
+                    help=">1 routes through the elastic coordinator "
+                         "(repro.runtime.coordinator.fit_elastic) on a "
+                         "mesh over that many devices")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="simulated hosts (contiguous device blocks); "
+                         "per-host checkpoint shard files when "
+                         "--checkpoint-dir is set")
+    ap.add_argument("--model", type=int, default=1,
+                    help="requested model-axis width (remesh picks the "
+                         "largest feasible width <= this)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="arm checkpoint/rollback resilience; required "
+                         "to survive host loss")
     args = ap.parse_args()
 
     X, labels = load_dataset(args.dataset, args.n)
@@ -63,6 +77,33 @@ def main():
                                 dim_ld=args.dim_ld)
     hp = funcsne.default_hparams(n, alpha=args.alpha,
                                  perplexity=args.perplexity)
+
+    if args.devices > 1:
+        # distributed path: the elastic coordinator owns the loop
+        # (mesh-reduced health probes, per-host checkpoint shards,
+        # remesh-and-resume on host loss)
+        from repro.core.resilience import ResiliencePolicy
+        from repro.runtime.coordinator import fit_elastic
+        policy = ResiliencePolicy(checkpoint_dir=args.checkpoint_dir) \
+            if args.checkpoint_dir else None
+        devices = jax.devices()[:args.devices]
+        t0 = time.time()
+        st = fit_elastic(Xj, cfg=cfg, n_iter=iters, chunk_size=T,
+                         hparams=hp, n_hosts=args.hosts,
+                         model=args.model, devices=devices,
+                         resilience=policy)
+        jax.block_until_ready(st.Y)
+        dt = time.time() - t0
+        Y = np.asarray(jax.device_get(st.Y))
+        q = float(embedding_quality(jnp.asarray(X), jnp.asarray(Y)))
+        print(f"[embed] {args.dataset} n={n} iters={iters} chunk={T} "
+              f"devices={len(devices)} hosts={args.hosts}: {dt:.1f}s "
+              f"(compile included), R_NX AUC={q:.3f}")
+        if args.out:
+            np.save(args.out, Y)
+            print(f"[embed] wrote {args.out}")
+        return
+
     st = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg,
                             perplexity=hp.perplexity)
     chunk = funcsne.make_chunked_step(cfg, T,

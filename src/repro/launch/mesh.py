@@ -22,6 +22,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
+def host_device_blocks(devices, n_hosts: int) -> list:
+    """Partition a flat device list into ``n_hosts`` contiguous blocks.
+
+    The simulated-pod convention used by the elastic coordinator (and by
+    :func:`repro.checkpoint.row_shard_filter` for rows): host ``h`` owns
+    ``devices[h*n/H : (h+1)*n/H]``.  Matches how real pods enumerate --
+    ``jax.devices()`` orders by process, so a process's devices ARE a
+    contiguous block.
+    """
+    devices = list(devices)
+    n = len(devices)
+    if not 1 <= n_hosts <= n:
+        raise ValueError(f"n_hosts={n_hosts} for {n} devices")
+    return [devices[h * n // n_hosts:(h + 1) * n // n_hosts]
+            for h in range(n_hosts)]
+
+
 def batch_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

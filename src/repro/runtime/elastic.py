@@ -1,33 +1,97 @@
 """Elastic scaling: rebuild the mesh after membership changes and re-shard.
 
-Flow on failure/resize (pod granularity -- the DCN axis is pure DP so pods
-are the natural elasticity unit):
-  1. the launcher detects a dead pod (heartbeat / straggler alarm),
+Flow on failure/resize (host granularity -- the coordinator in
+``repro.runtime.coordinator`` drives this for the embedding workload):
+  1. the coordinator detects a dead host (heartbeat / straggler alarm /
+     an injected ``faults.HostLoss``),
   2. survivors quiesce, the last committed checkpoint is the truth,
-  3. ``remesh()`` builds a mesh over the remaining devices (dropping the
-     pod axis or shrinking it),
+  3. ``remesh()`` builds a mesh over the remaining devices (shrinking the
+     data axis, and the model axis if it no longer fits),
   4. ``Checkpointer.restore(..., shardings=new)`` re-lays-out the state,
-  5. the data cursor advances with the *new* global batch mapping.
+  5. the chunked schedule replays from the carried ``st.step`` (chunk
+     boundaries are bit-neutral, so no iteration is lost or repeated).
 
-Checkpoints store unsharded arrays, so any (old mesh -> new mesh) pair
-works; there is no resharding converter to maintain.
+Checkpoints store unsharded arrays (per-host row slices merge back to
+unsharded on load), so any (old mesh -> new mesh) pair works; there is no
+resharding converter to maintain.
+
+Mesh-change events (``devices_dropped``, and anything a caller logs
+through ``on_event``) are recorded in a module event log (:func:`events`)
+-- the same structured-telemetry idiom as ``repro.kernels.fallback``.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import List, Optional, Sequence
 
 import jax
 
 from repro import compat
 
+_EVENTS: List[dict] = []
 
-def remesh(n_devices: int, *, model: int = 16, axis_names=("data", "model")):
-    """Largest (data, model) mesh fitting n_devices with fixed TP width."""
-    if n_devices < model:
-        model = n_devices
+
+def events(since: int = 0) -> List[dict]:
+    """Structured mesh-change events recorded by :func:`remesh`."""
+    return list(_EVENTS[since:])
+
+
+def n_events() -> int:
+    return len(_EVENTS)
+
+
+def reset_events() -> None:
+    _EVENTS.clear()
+
+
+def _emit(event: dict, on_event=None) -> dict:
+    _EVENTS.append(event)
+    if on_event is not None:
+        on_event(event)
+    return event
+
+
+def remesh(n_devices: int = None, *, model: int = 16,
+           axis_names=("data", "model"), devices: Sequence = None,
+           exact_model: bool = False, divides: Sequence[int] = (),
+           on_event=None):
+    """Largest (data, model) mesh over the surviving devices.
+
+    ``model`` is the *requested* tensor-parallel width.  Unless
+    ``exact_model``, the actual width is the largest feasible one
+    ``<= model`` that divides the device count (and every extra
+    constraint in ``divides``, e.g. the feature dim the model axis
+    shards), so NO device is silently discarded: 24 devices at
+    ``model=16`` build a (2, 12) mesh instead of using 16 chips and
+    dropping 8 on the floor.  ``exact_model=True`` keeps the requested
+    width and truncates -- any device left out is reported as a
+    structured ``devices_dropped`` event (module log + ``on_event``)
+    rather than vanishing.
+
+    ``devices`` restricts the pool (the coordinator passes the
+    survivors); default is all of ``jax.devices()``.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    if n_devices is None:
+        n_devices = len(devices)
+    n_devices = min(int(n_devices), len(devices))
+    if n_devices < 1:
+        raise ValueError("remesh needs at least one surviving device")
+    model = max(1, min(int(model), n_devices))
+    if not exact_model:
+        def feasible(m):
+            return n_devices % m == 0 and all(d % m == 0 for d in divides)
+        while model > 1 and not feasible(model):
+            model -= 1
     data = n_devices // model
-    devices = jax.devices()[: data * model]
-    return compat.make_mesh((data, model), axis_names, devices=devices)
+    used = data * model
+    if used < n_devices:
+        _emit({"kind": "devices_dropped", "requested_model": model,
+               "n_devices": n_devices, "n_used": used,
+               "n_dropped": n_devices - used,
+               "dropped": [str(d) for d in devices[used:n_devices]]},
+              on_event)
+    return compat.make_mesh((data, model), axis_names,
+                            devices=devices[:used])
 
 
 def surviving_pods(heartbeats: dict, timeout_s: float, now: float) -> list:

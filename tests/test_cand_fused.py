@@ -249,6 +249,7 @@ def _assert_states_equal(a, b, skip=()):
                                       err_msg=name)
 
 
+@pytest.mark.slow
 def test_cand_fused_step_bit_equal_to_jnp_sampler_feed(monkeypatch):
     """Acceptance: a 50-step trajectory with candidates generated
     *inside* the kernel is bit-equal to the jnp reference sampler

@@ -244,6 +244,7 @@ def test_fit_early_stop_host_loop_fallback():
     assert int(st.step) < 30, int(st.step)
 
 
+@pytest.mark.slow
 def test_chunked_trajectory_statistically_equivalent_long_horizon():
     """Over 60 steps the ulp-level codegen differences fork discrete KNN
     choices (see module docstring), so the long-horizon contract is the

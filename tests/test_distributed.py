@@ -10,6 +10,10 @@ import textwrap
 
 import pytest
 
+# distributed-parity suite: every test pays a subprocess + 8-device
+# compile; excluded from the tier-1 PR gate, run on the schedule
+pytestmark = pytest.mark.slow
+
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -1,0 +1,263 @@
+"""Shard-blind probe fix + multi-host elastic resume (subprocess: 8 fake
+CPU devices, same convention as tests/test_distributed.py).
+
+The regression under test: health telemetry used to be computed per
+replica and read from shard 0 only (``out_specs=P()`` under
+``check_vma=False`` hands the host the first addressable shard's value),
+so a NaN confined to another device's replica never tripped the global
+rollback.  The fix probes each shard's own row slice and pmin/pmax-es
+the scalars across the mesh inside the chunk program; the legacy path is
+kept behind ``health_reduce=False`` as the positive-control anchor.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# shares the test bodies' 8-space indent so the concatenation dedents
+_SETUP = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro import compat
+        from repro.data.synthetic import blobs
+        from repro.core import funcsne
+        from repro.runtime import faults
+
+        X, _ = blobs(n=256, dim=16, n_centers=4, center_std=6.0)
+        Xj = jnp.asarray(X)
+        mesh = compat.make_mesh((8, 1), ("data", "model"))
+        cfg = funcsne.FuncSNEConfig(n_points=256, dim_hd=16,
+                                    backend="xla")
+        st0 = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+        hp = funcsne.default_hparams(256)
+        Xs = jax.device_put(Xj, NamedSharding(mesh, P(None, "model")))
+        cp = lambda s: jax.device_put(
+            jax.tree.map(lambda a: jnp.array(a, copy=True), s),
+            NamedSharding(mesh, P()))
+"""
+
+
+def test_shard_confined_nan_trips_reduced_probe_only():
+    """Positive control for the shard-blind bug: NaN rows in ONE
+    device's replica of ``vel`` (purely local momentum update -> the NaN
+    reaches only that device's Y within the step).  The legacy
+    ``health_reduce=False`` probe reports a perfectly healthy chunk; the
+    mesh-reduced probe trips with the correct shard-local finite
+    fraction and first-bad-step."""
+    out = _run(_SETUP + """
+        def probe(reduce):
+            chunk, _ = funcsne.make_distributed_step(
+                cfg, mesh, chunk=1, health_reduce=reduce)
+            st = cp(st0)
+            st = faults.NaNChunk(at_step=0, shard=3, field="vel",
+                                 rows=4).apply(st, 0)
+            _, _, m = chunk(st, Xs, hp)
+            return float(m.finite_frac), int(m.bad_step)
+
+        ff_blind, bad_blind = probe(False)
+        ff_mesh, bad_mesh = probe(True)
+        # the old probe commits the corruption silently...
+        assert ff_blind == 1.0 and bad_blind == -1, (ff_blind, bad_blind)
+        # ...the reduced probe reports shard 3's slice: 4 of its 32 rows
+        # went NaN at step 0
+        np.testing.assert_allclose(ff_mesh, 28.0 / 32.0, rtol=1e-6)
+        assert bad_mesh == 0, bad_mesh
+        print("OK shard-blind positive control")
+    """)
+    assert "OK" in out
+
+
+def test_shard_confined_nan_rolls_back_deterministically():
+    """End-to-end on the coordinator: the shard-confined fault trips the
+    global probe, the rollback-retry completes the run finite, and the
+    whole faulted run is bit-deterministic (two identical runs agree
+    exactly -- retry replays the same chunk program from the same
+    replicated anchor)."""
+    out = _run(_SETUP + """
+        from repro.core.resilience import ResiliencePolicy
+        from repro.runtime.coordinator import fit_elastic
+
+        def run():
+            policy = ResiliencePolicy(max_retries=2)
+            with faults.active(faults.FaultScript(faults.NaNChunk(
+                    at_step=8, shard=5, field="vel", rows=4))):
+                st = fit_elastic(Xj, cfg=cfg, n_iter=16, chunk_size=4,
+                                 resilience=policy)
+            return st, policy
+
+        st_a, pol_a = run()
+        st_b, _ = run()
+        kinds = [e["kind"] for e in pol_a.events]
+        assert "rollback" in kinds, kinds
+        assert int(st_a.step) == 16
+        assert bool(jnp.isfinite(st_a.Y).all())
+        np.testing.assert_array_equal(np.asarray(st_a.Y),
+                                      np.asarray(st_b.Y))
+        print("OK rollback", kinds.count("rollback"))
+    """)
+    assert "OK" in out
+
+
+def test_per_host_shard_checkpoint_merges_on_restore():
+    """Each simulated host writes only its row slice (+ host 0 the
+    replicated leaves); the committed step dir restores to the full
+    state, including onto a smaller mesh."""
+    out = _run("""
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
+        from repro.checkpoint import Checkpointer, row_shard_filter
+
+        n = 64
+        tree = {"Y": jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2),
+                "idx": jnp.arange(n * 3, dtype=jnp.int32).reshape(n, 3),
+                "zhat": jnp.float32(3.5),
+                "key": jnp.arange(2, dtype=jnp.uint32)}
+        d = tempfile.mkdtemp()
+        ck = Checkpointer(d)
+        H = 4
+        for h in range(H):
+            ck.save(7, tree, blocking=True,
+                    host_shard_filter=row_shard_filter(h, H, n),
+                    host_id=h, n_hosts=H)
+        # the step dir only commits once every host's part landed
+        assert ck.latest_step() == 7
+        files = sorted(p.name for p in (ck.dir / "step_0000000007")
+                       .glob("shard*.npz"))
+        assert len(files) == H, files
+
+        mesh = compat.make_mesh((2,), ("data",),
+                                devices=jax.devices()[:2])
+        got, meta = ck.restore(
+            jax.tree.map(jnp.zeros_like, tree),
+            shardings=jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), tree))
+        assert meta["n_hosts"] == H
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(tree[k]), err_msg=k)
+        assert got["Y"].sharding.mesh.devices.size == 2
+        print("OK per-host shards merge", files)
+    """)
+    assert "OK" in out
+
+
+def test_partial_shard_set_does_not_commit():
+    """A step dir with a missing host part must stay invisible: restore
+    keeps serving the previous committed step."""
+    out = _run("""
+        import tempfile, jax.numpy as jnp, numpy as np
+        from repro.checkpoint import Checkpointer, row_shard_filter
+
+        n = 16
+        tree = {"Y": jnp.ones((n, 2), jnp.float32)}
+        d = tempfile.mkdtemp()
+        ck = Checkpointer(d)
+        ck.save(1, tree, blocking=True)             # committed baseline
+        ck.save(2, {"Y": tree["Y"] * 2}, blocking=True,
+                host_shard_filter=row_shard_filter(0, 2, n),
+                host_id=0, n_hosts=2)               # host 1 never writes
+        assert ck.latest_step() == 1, ck.all_steps()
+        got, meta = ck.restore({"Y": jnp.zeros((n, 2))})
+        assert meta["step"] == 1
+        np.testing.assert_array_equal(np.asarray(got["Y"]),
+                                      np.asarray(tree["Y"]))
+        print("OK partial set stays uncommitted")
+    """)
+    assert "OK" in out
+
+
+def test_remesh_uses_every_device_or_reports_drops():
+    """6 devices at a requested model width of 4: the old remesh built
+    (1, 4) and silently discarded two devices.  Now it picks the largest
+    feasible width <= request ((2, 3) -- all six devices used), honours
+    extra divisibility constraints, and when forced (exact_model) emits
+    a structured devices_dropped event instead of staying silent."""
+    out = _run("""
+        import jax
+        from repro.runtime import elastic
+
+        elastic.reset_events()
+        devs = jax.devices()[:6]
+
+        mesh = elastic.remesh(model=4, devices=devs)
+        assert dict(mesh.shape) == {"data": 2, "model": 3}, mesh.shape
+        assert mesh.devices.size == 6          # nobody on the floor
+        assert elastic.n_events() == 0
+
+        # model axis shards a feature dim of 8 -> width must divide both
+        mesh = elastic.remesh(model=4, devices=devs, divides=(8,))
+        assert dict(mesh.shape) == {"data": 3, "model": 2}, mesh.shape
+
+        seen = []
+        mesh = elastic.remesh(model=4, devices=devs, exact_model=True,
+                              on_event=seen.append)
+        assert dict(mesh.shape) == {"data": 1, "model": 4}, mesh.shape
+        (ev,) = seen
+        assert ev["kind"] == "devices_dropped" and ev["n_dropped"] == 2
+        assert elastic.events()[-1] == ev       # module log too
+        print("OK remesh", dict(mesh.shape))
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_host_loss_elastic_resume_matches_uninterrupted_quality():
+    """Kill one simulated host mid-run: the coordinator resumes on the
+    shrunken mesh from the last committed boundary and finishes every
+    iteration.  Bitwise parity with the uninterrupted run is not
+    expected (the smaller mesh regroups the force psum), so the
+    acceptance bound is embedding quality: R_NX AUC within tolerance of
+    the uninterrupted run on the same data."""
+    out = _run("""
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from repro.data.synthetic import blobs
+        from repro.core import funcsne
+        from repro.core.quality import embedding_quality
+        from repro.core.resilience import ResiliencePolicy
+        from repro.runtime import faults
+        from repro.runtime.coordinator import fit_elastic
+
+        X, _ = blobs(n=256, dim=16, n_centers=4, center_std=6.0)
+        Xj = jnp.asarray(X)
+        cfg = funcsne.FuncSNEConfig(n_points=256, dim_hd=16,
+                                    backend="xla")
+        kw = dict(cfg=cfg, n_iter=96, chunk_size=8, n_hosts=2)
+
+        st_ref = fit_elastic(Xj, resilience=ResiliencePolicy(), **kw)
+
+        d = tempfile.mkdtemp()
+        policy = ResiliencePolicy(checkpoint_dir=d, checkpoint_every=1)
+        with faults.active(faults.FaultScript(
+                faults.HostLoss(at_step=40, host=1))):
+            st = fit_elastic(Xj, resilience=policy, **kw)
+
+        assert int(st.step) == 96, int(st.step)
+        assert bool(jnp.isfinite(st.Y).all())
+        kinds = [e["kind"] for e in policy.events]
+        assert "host_lost" in kinds and "remesh" in kinds, kinds
+        rm = next(e for e in policy.events if e["kind"] == "remesh")
+        assert rm["step"] == 40 and rm["n_devices"] == 4, rm
+
+        q_ref = float(embedding_quality(Xj, jnp.asarray(st_ref.Y)))
+        q_got = float(embedding_quality(Xj, jnp.asarray(st.Y)))
+        assert q_got > q_ref - 0.05, (q_ref, q_got)
+        print("OK elastic resume", q_ref, "->", q_got)
+    """)
+    assert "OK" in out

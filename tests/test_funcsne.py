@@ -153,6 +153,7 @@ def test_interactive_hparams_no_recompile():
     assert bool(jnp.isfinite(st.Y).all())
 
 
+@pytest.mark.slow
 def test_gather_fused_step_bit_equivalent_to_pregather():
     """The gather-fused call-site rewiring is a pure data-path change: on
     the XLA backend, 50 steps from the same seed must produce *identical*
@@ -185,6 +186,7 @@ def test_gather_fused_step_bit_equivalent_to_pregather():
             np.asarray(getattr(st_legacy, name)), err_msg=name)
 
 
+@pytest.mark.slow
 def test_scatter_fused_step_trajectory_equivalent():
     """50 steps with the scatter-fused epilogue vs the legacy edge +
     ``.at[].add`` epilogue, same seed.  Positions cannot stay bit-equal

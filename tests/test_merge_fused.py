@@ -185,6 +185,7 @@ def test_property_merge_fused_discrete_parity(n, m, b, k, c, rescore, seed):
 # Step level: flag parity and interpret-backend execution
 
 
+@pytest.mark.slow
 def test_merge_fused_step_bit_equivalent_on_xla():
     """cfg.merge_fused is bit-neutral on the XLA backend: the ref IS the
     legacy dedup/top_k pipeline, so 50 steps from the same seed must
@@ -212,6 +213,7 @@ def test_merge_fused_step_bit_equivalent_on_xla():
                                       err_msg=name)
 
 
+@pytest.mark.slow
 def test_merge_fused_step_interpret_trajectory():
     """A few steps with the merge kernel (interpret) vs the XLA selection
     epilogue, same interpret distance kernels: fp32-tolerance parity of

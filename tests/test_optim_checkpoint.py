@@ -193,6 +193,45 @@ def test_checkpoint_async_save_error_surfaces_on_next_save(tmp_path,
         ck.save(2, _tree())               # save() waits on the prior write
 
 
+@pytest.mark.parametrize("keep_last", [0, 1])
+def test_checkpoint_prune_keep_last_small(tmp_path, keep_last):
+    """keep_last=1 keeps exactly the newest step; keep_last=0 keeps
+    NOTHING (regression: `steps[:-0]` is the empty slice, so the old
+    prune silently kept everything)."""
+    ck = Checkpointer(tmp_path, keep_last=keep_last)
+    for s in (1, 2, 3):
+        ck.save(s, _tree(s), blocking=True)
+    assert ck.all_steps() == ([] if keep_last == 0 else [3])
+
+
+def test_checkpoint_close_warns_on_unobserved_error(tmp_path, monkeypatch):
+    ck = Checkpointer(tmp_path)
+    _broken_savez(monkeypatch)
+    ck.save(1, _tree())
+    with pytest.warns(RuntimeWarning, match="never observed"):
+        ck.close()                        # error path: warn, don't raise
+    assert ck.last_error is None          # delivered, not re-armed
+
+
+def test_checkpoint_del_warns_on_unobserved_error(tmp_path, monkeypatch):
+    ck = Checkpointer(tmp_path)
+    _broken_savez(monkeypatch)
+    ck.save(1, _tree())
+    ck._thread.join()                     # error parked in last_error
+    with pytest.warns(RuntimeWarning, match="garbage-collected"):
+        ck.__del__()
+
+
+def test_checkpoint_close_is_quiet_after_wait(tmp_path):
+    import warnings as _w
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree())
+    ck.wait()
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        ck.close()                        # clean shutdown: no warning
+
+
 def test_checkpoint_funcsne_state_roundtrip_bitwise(tmp_path):
     """The resilience contract: a FuncSNEState (embedding, KNN tables,
     RNG key, reverse-edge cache) survives save/restore bit-for-bit."""

@@ -10,6 +10,8 @@ The recovery contracts pinned here are the ones ISSUE 6 promises:
     bit-identical to a run with the family demoted up front;
   * a clean run under a ResiliencePolicy is bit-identical to one without.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -239,6 +241,61 @@ def test_kernel_fault_demotes_and_matches_predemoted_run():
         _assert_state_equal(st_fault, st_ref)
     finally:
         fallback.reset()
+
+
+def test_fallback_registry_is_thread_safe_under_churn():
+    """Two threads hammer the registry -- one demoting/noting fresh
+    families, one reading events()/demotions()/is_demoted() -- while the
+    readers iterate snapshots.  Before the lock fix the readers copied
+    the shared dict/list WHILE the writer appended (a genuine race:
+    `dict(_DEMOTED)` and `list(_EVENTS[...])` iterate the live
+    containers outside _LOCK); this drives it hard enough to blow up
+    with RuntimeError('dictionary changed size during iteration') under
+    the old code."""
+    import threading
+    import warnings as _w
+
+    fallback.reset()
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        try:
+            with _w.catch_warnings():
+                _w.simplefilter("ignore", RuntimeWarning)
+                i = 0
+                while not stop.is_set():
+                    fallback.demote(f"fam_{i}", "stress")
+                    fallback.note(f"fam_{i}", f"reason_{i}")
+                    i += 1
+        except Exception as e:          # pragma: no cover - fail surface
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                for ev in fallback.events():
+                    assert "kind" in ev
+                d = fallback.demotions()
+                assert all(isinstance(r, str) for r in d.values())
+                fallback.is_demoted("fam_0")
+                fallback.n_events()
+                fallback.is_enabled()
+        except Exception as e:          # pragma: no cover - fail surface
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer),
+               threading.Thread(target=reader)]
+    try:
+        for t in threads:
+            t.start()
+        time.sleep(1.0)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        fallback.reset()
+    assert not errors, errors
 
 
 # ---------------------------------------------------------------------------
