@@ -114,6 +114,54 @@ def _health_rows(n, Xj, iters, T, trials=5):
     ]
 
 
+def _audit_rows(n, Xj, iters, T, trials=5):
+    """Full-chunk A/B of the chunk-boundary state auditor (resilience
+    layer): the driver loop with ``audit_state`` + its host read after
+    EVERY chunk (``audit_every=1``, the worst case) vs the plain loop.
+    The audit is one fused pass over the index tables with no gathers,
+    so the acceptance bar is <=1% per chunk at production chunk sizes.
+    Paired/interleaved best-of like the chunked rows."""
+    cfg = funcsne.FuncSNEConfig(n_points=n, dim_hd=Xj.shape[1])
+    hp = funcsne.default_hparams(n)
+    st0 = funcsne.init_state(jax.random.PRNGKey(0), Xj, cfg)
+    n_chunks = max(1, iters // T)
+    chunk = funcsne.make_chunked_step(cfg, T)
+
+    def run_plain():
+        st = _copy(st0)                   # the program donates its input
+        for _ in range(n_chunks):
+            st, _, _ = chunk(st, Xj, hp)
+        jax.block_until_ready(st.Y)
+        return n_chunks * T
+
+    def run_audited():
+        st = _copy(st0)
+        for _ in range(n_chunks):
+            st, _, _ = chunk(st, Xj, hp)
+            jax.device_get(funcsne.audit_state(st, cfg, Xj))
+        jax.block_until_ready(st.Y)
+        return n_chunks * T
+
+    runners = {False: run_plain, True: run_audited}
+    for r in runners.values():
+        r()                               # compile outside the clock
+    best = {h: float("inf") for h in runners}
+    for t in range(trials):
+        order = (False, True) if t % 2 == 0 else (True, False)
+        for h in order:
+            steps, dt = timed(runners[h])
+            best[h] = min(best[h], dt * 1e6 / steps)
+    ratio = best[True] / max(best[False], 1e-9)
+    return [
+        row(f"fig8_audit_off_n{n}", best[False],
+            f"T{T} chunks, no boundary audit"),
+        row(f"fig8_audit_on_n{n}", best[True],
+            f"T{T} chunks, audit_every=1 boundary audit"),
+        row(f"fig8_audit_overhead_n{n}", ratio,
+            f"on_us/off_us={ratio:.3f} (ratio, not us; bar <=1.01)"),
+    ]
+
+
 def _cand_rows(n, iters, trials=3):
     """Full-step A/B of the candidate-generation phase (§Perf H17):
     ``cand_fused=False`` (legacy threefry sampler + (n, s, K2) two-hop
@@ -200,6 +248,10 @@ def run(sizes=(512, 1024, 2048, 4096), iters=120, chunk_sizes=(1, 50),
     # health-telemetry A/B (resilience layer): the on-device probes must
     # stay in the noise next to the force phase
     rows += _health_rows(n, jnp.asarray(X), iters, chunk_sizes[-1])
+
+    # chunk-boundary auditor A/B (trusted recovery): worst-case
+    # audit_every=1 must stay <=1% next to a full chunk dispatch
+    rows += _audit_rows(n, jnp.asarray(X), iters, chunk_sizes[-1])
 
     # candidate-phase A/B (§Perf H17): more calls at the small size so
     # sub-ms deltas aren't swamped by dispatch noise

@@ -1,2 +1,6 @@
-from repro.checkpoint.checkpointer import (Checkpointer,  # noqa: F401
+from repro.checkpoint.checkpointer import (CheckpointCorrupt,  # noqa: F401
+                                           CheckpointError,
+                                           CheckpointIncompatible,
+                                           CheckpointNotFound,
+                                           Checkpointer, cfg_compat,
                                            row_shard_filter)

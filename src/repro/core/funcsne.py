@@ -160,6 +160,7 @@ import contextlib
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -1181,6 +1182,88 @@ def _scaled_hp(hp: HParams, lr_scale: float, ex_scale: float) -> HParams:
         exaggeration=hp.exaggeration * jnp.float32(ex_scale))
 
 
+class AuditResult(NamedTuple):
+    """Violation counts from :func:`audit_state` -- all () int32, all
+    zero for a healthy state."""
+    hd_oob: Any         # hd_idx entries outside [0, n) (mod SENTINEL)
+    ld_oob: Any         # ld_idx entries outside [0, n) (mod SENTINEL)
+    rev_oob: Any        # rev_idx entries outside [0, n) (mod SENTINEL)
+    hd_dup: Any         # per-row duplicate hd neighbours (mod SENTINEL)
+    ld_dup: Any         # per-row duplicate ld neighbours (mod SENTINEL)
+    hd_sentinel: Any    # SENTINEL hd slots whose distance is not +inf
+    y_nonfinite: Any    # non-finite Y entries on active rows
+    x_nonfinite: Any    # non-finite X entries on active rows (0 if no X)
+
+
+@functools.lru_cache(maxsize=None)
+def _audit_fn(cfg: FuncSNEConfig, with_x: bool):
+    n = cfg.n_points
+
+    def _oob(idx):
+        if not hasattr(idx, "ndim") or idx.ndim != 2 or idx.shape[1] == 0:
+            return jnp.int32(0)
+        bad = (idx != SENTINEL) & ((idx < 0) | (idx >= n))
+        return jnp.sum(bad.astype(jnp.int32))
+
+    def _dups(idx):
+        # per-row duplicates via sort + adjacent-compare: O(K log K) per
+        # row instead of the (K, K) broadcast; SENTINEL padding sorts to
+        # the end, so equal-adjacent SENTINELs are masked out
+        if not hasattr(idx, "ndim") or idx.ndim != 2 or idx.shape[1] < 2:
+            return jnp.int32(0)
+        s = jnp.sort(idx, axis=1)
+        eq = (s[:, 1:] == s[:, :-1]) & (s[:, 1:] != SENTINEL)
+        return jnp.sum(eq.astype(jnp.int32))
+
+    def audit(st, X):
+        act_col = st.active[:, None]
+        # SENTINEL hd slots must carry +inf distance: the merge kernels
+        # key validity off the distance, so a finite distance on a
+        # SENTINEL slot resurrects a phantom neighbour.  (ld_d is a
+        # zeros placeholder on the mesh path and add_points seeds valid
+        # idx with +inf distance, so only hd and only this direction.)
+        hd_bad_sent = (st.hd_idx == SENTINEL) & ~jnp.isinf(st.hd_d)
+        res = AuditResult(
+            hd_oob=_oob(st.hd_idx), ld_oob=_oob(st.ld_idx),
+            rev_oob=_oob(st.rev_idx),
+            hd_dup=_dups(st.hd_idx), ld_dup=_dups(st.ld_idx),
+            hd_sentinel=jnp.sum(hd_bad_sent.astype(jnp.int32)),
+            y_nonfinite=jnp.sum(
+                (~jnp.isfinite(st.Y) & act_col).astype(jnp.int32)),
+            x_nonfinite=jnp.sum(
+                (~jnp.isfinite(X) & act_col).astype(jnp.int32))
+            if with_x else jnp.int32(0))
+        return res
+
+    if with_x:
+        return jax.jit(audit)
+    return jax.jit(lambda st: audit(st, None))
+
+
+def audit_state(st: FuncSNEState, cfg: FuncSNEConfig,
+                X=None) -> AuditResult:
+    """Cheap on-device invariant audit of a :class:`FuncSNEState`:
+    KNN / reverse-edge indices in ``[0, n)`` (modulo SENTINEL), per-row
+    duplicate-free neighbour lists, SENTINEL slots distance-consistent,
+    and finite Y (and X, when given) on active rows.
+
+    Every check is a fused reduction over state already on device -- one
+    pass over the index tables, no gathers, no host round-trip until the
+    caller reads the counts -- so it is cheap enough to run at chunk
+    boundaries (``ResiliencePolicy(audit_every=)``).  It exists for the
+    corruption class the finite-fraction health probes are blind to:
+    a poisoned index table is made of perfectly finite integers, and the
+    embedding it slowly drags out of shape stays finite too.
+
+    Returns an :class:`AuditResult` of () int32 violation counts (all
+    zero = healthy); jit-compiled once per (cfg, X-given) and cached.
+    Works unchanged on mesh-replicated state (the reductions compile to
+    the shard-local sum + an AllReduce).
+    """
+    fn = _audit_fn(cfg, X is not None)
+    return fn(st, X) if X is not None else fn(st)
+
+
 def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
         hparams: HParams = None,
         schedule: Callable[[int, int, HParams], HParams] = None,
@@ -1333,11 +1416,23 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
                                   hang_timeout=policy.hang_timeout,
                                   warmup_steps=policy.straggler_warmup)
     if resume_from is not None:
-        from repro.checkpoint import Checkpointer
+        from repro.checkpoint import Checkpointer, cfg_compat
         rck = ck if (ck is not None
                      and str(ck.dir) == str(resume_from)) else \
             Checkpointer(resume_from)
-        tree, meta = rck.restore(st)
+        # fallback-chain restore: a damaged newest boundary (torn write,
+        # bit flip, lost shard) degrades to the previous verified one
+        # instead of crashing or silently loading garbage; a cfg
+        # mismatch raises CheckpointIncompatible (never falls back)
+        tree, meta, fbs = rck.restore_verified(
+            st, expect_compat=cfg_compat(cfg))
+        for fb in fbs:
+            if policy is not None:
+                policy.log("checkpoint_fallback", **fb)
+            else:
+                warnings.warn(
+                    f"[checkpoint] skipping damaged boundary step "
+                    f"{fb['step']}: {fb['reason']}", RuntimeWarning)
         st = jax.tree.map(jnp.asarray, tree)
         start_it = int(meta["step"])
         lr_scale = float(meta.get("lr_scale", 1.0))
@@ -1377,6 +1472,7 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
                 st_in = st
             t0 = time.time()
             st_out, snaps, metrics = chunks[T](st_in, X, hp_run)
+            alarm = None
             if policy is not None:
                 m = jax.device_get(metrics)   # THE one host sync per chunk
                 alarm = monitor.observe(time.time() - t0)
@@ -1386,6 +1482,16 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
                     policy.log(**e)
                 fb_seen = fallback.n_events()
                 reason = policy.check(m)
+                if reason is None and policy.audit_every \
+                        and (n_healthy + 1) % policy.audit_every == 0:
+                    # chunk-boundary invariant audit: catches index
+                    # corruption the finite-fraction probes are blind
+                    # to; a violation feeds the SAME rollback path
+                    aud = jax.device_get(audit_state(st_out, cfg, X))
+                    reason = policy.audit_check(aud)
+                    if reason is not None:
+                        policy.log("audit_violation", step=it,
+                                   reason=reason)
                 if reason is not None:
                     if retries >= policy.max_retries:
                         policy.log("giving_up", step=it, reason=reason,
@@ -1412,10 +1518,29 @@ def fit(X, *, cfg: FuncSNEConfig = None, n_iter: int = 750, rng=None,
             it += T
             if policy is not None:
                 n_healthy += 1
-                if ck is not None \
-                        and n_healthy % policy.checkpoint_every == 0:
-                    ck.save(it, st, metadata={"lr_scale": lr_scale,
-                                              "ex_scale": ex_scale})
+                if ck is not None:
+                    from repro.checkpoint import cfg_compat
+                    meta = {"lr_scale": lr_scale, "ex_scale": ex_scale,
+                            "compat": cfg_compat(cfg)}
+                    saved = n_healthy % policy.checkpoint_every == 0
+                    if saved:
+                        ck.save(it, st, metadata=meta)
+                    if alarm is not None:
+                        # hang/straggler escalation: commit THIS
+                        # boundary before the next dispatch
+                        # (straggler.py's contract) so a subsequent
+                        # kill loses at most one chunk
+                        if saved:
+                            ck.wait()       # land the in-flight write
+                        else:
+                            ck.save(it, st, metadata=meta,
+                                    blocking=True)
+                        policy.log("early_checkpoint", step=it,
+                                   alarm=alarm)
+            # scripted damage to the newest COMMITTED checkpoint (the
+            # hook waits for the in-flight write): exercises the
+            # verified-restore fallback chain on resume
+            faults.maybe_corrupt_checkpoint(it, ck)
             # simulated kill between chunks; the ExitStack's ck.close()
             # is the preemption grace period that lets the in-flight
             # checkpoint write land, so the just-saved boundary is

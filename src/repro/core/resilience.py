@@ -94,6 +94,12 @@ class ResiliencePolicy:
     # -- health probe thresholds ------------------------------------------
     min_finite_frac: float = 1.0        # trip when finite_frac < this
     max_abs_y: float = 1e8              # trip when max |Y| exceeds this
+    # -- chunk-boundary state audit ---------------------------------------
+    # run funcsne.audit_state every N healthy chunks (0 = off): catches
+    # index-table corruption that is invisible to the finite-fraction
+    # probes (poisoned indices are perfectly finite integers); costs one
+    # extra host sync per audited chunk, so leave sparse in production
+    audit_every: int = 0
     # -- graceful degradation ---------------------------------------------
     sticky_fallback: bool = True        # Pallas failure -> XLA ref, sticky
     # -- hang / straggler watchdog ----------------------------------------
@@ -127,4 +133,14 @@ class ResiliencePolicy:
         if not (ym <= self.max_abs_y) or math.isnan(ym):
             return (f"embedding explosion: max|Y|={ym:.3e} > "
                     f"{self.max_abs_y:.3e}")
+        return None
+
+    def audit_check(self, audit) -> Optional[str]:
+        """Trip reason from an :class:`~repro.core.funcsne.AuditResult`
+        (any non-zero violation counter), or None when clean.  Feeds the
+        same rollback/backoff path as :meth:`check`."""
+        bad = [f"{name}={int(v)}" for name, v in
+               zip(audit._fields, audit) if int(v) != 0]
+        if bad:
+            return "state audit violation: " + ", ".join(bad)
         return None

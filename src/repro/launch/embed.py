@@ -65,7 +65,17 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None,
                     help="arm checkpoint/rollback resilience; required "
                          "to survive host loss")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint-dir via the verified "
+                         "fallback chain (damaged boundaries are "
+                         "skipped with a checkpoint_fallback event)")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the chunk-boundary state auditor every N "
+                         "healthy chunks (0 = off); a violation rolls "
+                         "back like any health-probe trip")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     X, labels = load_dataset(args.dataset, args.n)
     Xj = jnp.asarray(X, jnp.float32)
@@ -84,14 +94,17 @@ def main():
         # remesh-and-resume on host loss)
         from repro.core.resilience import ResiliencePolicy
         from repro.runtime.coordinator import fit_elastic
-        policy = ResiliencePolicy(checkpoint_dir=args.checkpoint_dir) \
-            if args.checkpoint_dir else None
+        policy = ResiliencePolicy(checkpoint_dir=args.checkpoint_dir,
+                                  audit_every=args.audit_every) \
+            if args.checkpoint_dir or args.audit_every else None
         devices = jax.devices()[:args.devices]
         t0 = time.time()
         st = fit_elastic(Xj, cfg=cfg, n_iter=iters, chunk_size=T,
                          hparams=hp, n_hosts=args.hosts,
                          model=args.model, devices=devices,
-                         resilience=policy)
+                         resilience=policy,
+                         resume_from=args.checkpoint_dir
+                         if args.resume else None)
         jax.block_until_ready(st.Y)
         dt = time.time() - t0
         Y = np.asarray(jax.device_get(st.Y))
@@ -99,6 +112,33 @@ def main():
         print(f"[embed] {args.dataset} n={n} iters={iters} chunk={T} "
               f"devices={len(devices)} hosts={args.hosts}: {dt:.1f}s "
               f"(compile included), R_NX AUC={q:.3f}")
+        if args.out:
+            np.save(args.out, Y)
+            print(f"[embed] wrote {args.out}")
+        return
+
+    if args.checkpoint_dir or args.audit_every:
+        # resilient single-device path: funcsne.fit owns the loop
+        # (checkpoints, verified resume, rollback, optional audit)
+        from repro.core.resilience import ResiliencePolicy
+        policy = ResiliencePolicy(checkpoint_dir=args.checkpoint_dir,
+                                  audit_every=args.audit_every)
+        t0 = time.time()
+        st, _ = funcsne.fit(Xj, cfg=cfg, n_iter=iters, chunk_size=T,
+                            hparams=hp, resilience=policy,
+                            resume_from=args.checkpoint_dir
+                            if args.resume else None)
+        jax.block_until_ready(st.Y)
+        dt = time.time() - t0
+        Y = np.asarray(jax.device_get(st.Y))
+        q = float(embedding_quality(jnp.asarray(X), jnp.asarray(Y)))
+        resumed = [e for e in policy.events
+                   if e["kind"] == "checkpoint_fallback"]
+        note = f", {len(resumed)} damaged boundary(ies) skipped" \
+            if resumed else ""
+        print(f"[embed] {args.dataset} n={n} iters={iters} chunk={T} "
+              f"alpha={args.alpha}: {dt:.1f}s (compile included), "
+              f"R_NX AUC={q:.3f}{note}")
         if args.out:
             np.save(args.out, Y)
             print(f"[embed] wrote {args.out}")

@@ -122,6 +122,18 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
         st = funcsne.init_state(rng, Xh, cfg, init=init,
                                 perplexity=hparams.perplexity,
                                 validate=False)
+    from repro.checkpoint import cfg_compat
+
+    def restore_chain(rck, like):
+        """Fallback-chain restore onto the CURRENT mesh, logging one
+        ``checkpoint_fallback`` event per damaged boundary skipped."""
+        tree, meta, fbs = rck.restore_verified(
+            like, shardings=jax.tree.map(lambda _: repl, like),
+            expect_compat=cfg_compat(cfg))
+        for fb in fbs:
+            log("checkpoint_fallback", **fb)
+        return tree, meta
+
     start_it = 0
     lr_scale = ex_scale = 1.0
     if resume_from is not None:
@@ -129,29 +141,31 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
         rck = ck if (ck is not None
                      and str(ck.dir) == str(resume_from)) else \
             Checkpointer(resume_from)
-        tree, meta = rck.restore(st, shardings=jax.tree.map(
-            lambda _: repl, st))
+        tree, meta = restore_chain(rck, st)
         st = tree
         start_it = int(meta["step"])
         lr_scale = float(meta.get("lr_scale", 1.0))
         ex_scale = float(meta.get("ex_scale", 1.0))
     st = jax.device_put(st, repl)
 
-    def save_all_hosts(it, st):
+    def save_all_hosts(it, st, blocking=False):
         # one save() per simulated host: each writes only its row slice
         # (+ host 0 the replicated leaves); the completing write commits
         # the merged step dir.  save() joins the previous write first,
         # so the per-host writes serialise the way distinct hosts would
         # proceed independently.
-        meta = {"lr_scale": lr_scale, "ex_scale": ex_scale}
+        meta = {"lr_scale": lr_scale, "ex_scale": ex_scale,
+                "compat": cfg_compat(cfg)}
         if n_hosts == 1:
-            ck.save(it, st, metadata=meta)
+            ck.save(it, st, metadata=meta, blocking=blocking)
             return
         for h in range(n_hosts):
             ck.save(it, st, metadata=meta,
                     host_shard_filter=row_shard_filter(
                         h, n_hosts, cfg.n_points),
                     host_id=h, n_hosts=n_hosts)
+        if blocking:
+            ck.wait()
 
     chunks = {}         # T -> compiled program for the CURRENT mesh
     it = start_it
@@ -178,6 +192,7 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
                 st_in = st
             t0 = time.time()
             st_out, _, metrics = chunks[T](st_in, Xs, hp_run)
+            alarm = None
             if policy is not None:
                 m = jax.device_get(metrics)   # the one host sync
                 alarm = monitor.observe(time.time() - t0)
@@ -187,6 +202,17 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
                     log(**e)
                 fb_seen = fallback.n_events()
                 reason = policy.check(m)
+                if reason is None and policy.audit_every \
+                        and (n_healthy + 1) % policy.audit_every == 0:
+                    # chunk-boundary invariant audit (index corruption
+                    # is invisible to the finite-fraction probes); the
+                    # reductions AllReduce across the mesh, so one bad
+                    # replica trips the global rollback
+                    aud = jax.device_get(
+                        funcsne.audit_state(st_out, cfg, Xs))
+                    reason = policy.audit_check(aud)
+                    if reason is not None:
+                        log("audit_violation", step=it, reason=reason)
                 if reason is not None:
                     if retries >= policy.max_retries:
                         log("giving_up", step=it, reason=reason,
@@ -205,9 +231,19 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
             it += T
             if policy is not None:
                 n_healthy += 1
-                if ck is not None \
-                        and n_healthy % policy.checkpoint_every == 0:
-                    save_all_hosts(it, st)
+                if ck is not None:
+                    saved = n_healthy % policy.checkpoint_every == 0
+                    if saved:
+                        save_all_hosts(it, st)
+                    if alarm is not None:
+                        # hang/straggler escalation: commit this
+                        # boundary now so a kill loses at most one chunk
+                        if saved:
+                            ck.wait()
+                        else:
+                            save_all_hosts(it, st, blocking=True)
+                        log("early_checkpoint", step=it, alarm=alarm)
+            faults.maybe_corrupt_checkpoint(it, ck)
             faults.maybe_preempt(it)
             try:
                 faults.maybe_host_loss(it)
@@ -222,8 +258,10 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
                 n_hosts = max(1, n_hosts - 1)
                 mesh, Xs, repl = build(devices)
                 chunks.clear()          # old programs pin the old mesh
-                tree, meta = ck.restore(st, shardings=jax.tree.map(
-                    lambda _: repl, st))
+                # fallback-chain restore: the newest boundary may be the
+                # one the lost host's write tore -- degrade to the last
+                # verified one instead of materialising garbage
+                tree, meta = restore_chain(ck, st)
                 st = tree
                 it = int(meta["step"])
                 lr_scale = float(meta.get("lr_scale", 1.0))

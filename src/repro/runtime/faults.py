@@ -25,6 +25,19 @@ Every recovery path in ``funcsne.fit``'s resilience layer is exercised by
                              quiesces the survivors, re-forms the mesh
                              over the remaining devices and resumes
                              from the last committed chunk boundary.
+  :class:`CorruptShard`      damages the newest COMMITTED checkpoint on
+                             disk (truncate / bit-flip / delete one
+                             shard file) at a chunk boundary -- the
+                             torn-write / bad-disk case; the verified
+                             restore chain must detect it and fall back
+                             to the previous intact boundary.
+  :class:`IndexCorruption`   poisons a state index table (``hd_idx`` /
+                             ``rev_idx``) with out-of-range but
+                             perfectly FINITE values -- corruption the
+                             NaN health probes cannot see; only the
+                             chunk-boundary state auditor
+                             (``funcsne.audit_state`` via
+                             ``ResiliencePolicy(audit_every=)``) trips.
 
 Faults are one-shot by default (``fired`` latches), so a rolled-back
 retry of the same steps does not re-trip: the script models a transient
@@ -38,9 +51,9 @@ Usage::
     with faults.active(script):
         st, _ = funcsne.fit(X, resilience=ResiliencePolicy(), ...)
 
-``python -m repro.runtime.faults --smoke`` runs the three recovery
-scenarios end-to-end on tiny data with the kernels in interpret mode --
-the CI gate that keeps every path green in minutes.
+``python -m repro.runtime.faults --smoke`` runs every recovery scenario
+end-to-end on tiny data with the kernels in interpret mode -- the CI
+gate that keeps every path green in minutes.
 """
 from __future__ import annotations
 
@@ -72,14 +85,16 @@ class HostLost(RuntimeError):
         self.host = host
 
 
-def _poison_one_replica(arr, shard: int, rows: int):
-    """Rebuild a *replicated* mesh array with NaNs written into ONE
+def _poison_one_replica(arr, shard: int, rows: int, value=None):
+    """Rebuild a *replicated* mesh array with poison written into ONE
     device's buffer only -- rows ``[shard*n_loc, shard*n_loc+rows)`` of
     device ``shard``'s replica (its own row slice in the phase
-    decomposition).  This models a device-local corruption (bad HBM row,
-    miscompiled kernel on one core): the replication invariant is broken
-    but every collective still runs, which is exactly the fault a
-    shard-blind health probe commits silently."""
+    decomposition).  ``value=None`` writes NaN (float corruption);
+    an int ``value`` poisons integer index tables.  This models a
+    device-local corruption (bad HBM row, miscompiled kernel on one
+    core): the replication invariant is broken but every collective
+    still runs, which is exactly the fault a shard-blind health probe
+    commits silently."""
     import numpy as np
 
     import jax
@@ -88,7 +103,7 @@ def _poison_one_replica(arr, shard: int, rows: int):
     mesh = getattr(sharding, "mesh", None)
     if mesh is None or mesh.devices.size < 2:
         raise ValueError(
-            "NaNChunk(shard=...) needs a state replicated over a >=2 "
+            "per-shard poisoning needs a state replicated over a >=2 "
             "device mesh (NamedSharding); got " + repr(sharding))
     devs = list(mesh.devices.flat)
     if not (0 <= shard < len(devs)):
@@ -98,7 +113,7 @@ def _poison_one_replica(arr, shard: int, rows: int):
     n_loc = max(1, host.shape[0] // len(devs))
     lo = shard * n_loc
     bad = host.copy()
-    bad[lo:lo + min(rows, n_loc)] = np.nan
+    bad[lo:lo + min(rows, n_loc)] = np.nan if value is None else value
     bufs = [jax.device_put(bad if i == shard else host, d)
             for i, d in enumerate(devs)]
     return jax.make_array_from_single_device_arrays(
@@ -141,6 +156,84 @@ class NaNChunk:
         else:
             arr = _poison_one_replica(arr, self.shard, self.rows)
         return st._replace(**{self.field: arr})
+
+
+@dataclasses.dataclass
+class IndexCorruption:
+    """Poison an index table of the state entering the first chunk whose
+    start step is ``>= at_step``: the first ``rows`` rows of ``field``
+    (``hd_idx`` / ``ld_idx`` / ``rev_idx``) are overwritten with an
+    out-of-range but perfectly FINITE value (``n + 12345`` -- in-range
+    for int32, below the SENTINEL).  The finite-fraction / max-|Y|
+    health probes cannot see it (nothing is NaN and the embedding drifts
+    only slowly), which is exactly the corruption class
+    ``funcsne.audit_state`` exists for.  ``shard=s`` confines the poison
+    to device ``s``'s replica on a mesh (the audit reductions AllReduce,
+    so the mesh-global audit still trips)."""
+    at_step: int
+    field: str = "hd_idx"
+    rows: int = 8
+    once: bool = True
+    fired: bool = False
+    shard: Optional[int] = None
+
+    def apply(self, st, it: int):
+        if (self.fired and self.once) or it < self.at_step:
+            return st
+        self.fired = True
+        arr = getattr(st, self.field)
+        bad_val = st.active.shape[0] + 12345
+        if self.shard is None:
+            rows = min(self.rows, arr.shape[0])
+            arr = arr.at[:rows].set(bad_val)
+        else:
+            arr = _poison_one_replica(arr, self.shard, self.rows,
+                                      value=bad_val)
+        return st._replace(**{self.field: arr})
+
+
+@dataclasses.dataclass
+class CorruptShard:
+    """Damage the NEWEST committed checkpoint on disk at the first chunk
+    boundary ``>= at_step`` -- after the in-flight write lands, so the
+    damage hits a fully committed step the way a torn write, a flipped
+    bit in cold storage or a lost object does.  ``shard`` indexes the
+    sorted ``shard*-of-*.npz`` set (default -1: the last shard;
+    single-host checkpoints damage ``arrays.npz``).  ``damaged`` records
+    the file actually hit, for assertions."""
+    at_step: int
+    mode: str = "bitflip"       # "truncate" | "bitflip" | "delete"
+    shard: int = -1
+    once: bool = True
+    fired: bool = False
+    damaged: Optional[str] = None
+
+    def check(self, it: int, ck):
+        if ck is None or (self.fired and self.once) or it < self.at_step:
+            return
+        ck.wait()       # the in-flight write must COMMIT before damage:
+        #                 this models corruption of a good checkpoint,
+        #                 not a crash mid-write (the tmp-dir rename
+        #                 already covers that)
+        step = ck.latest_step()
+        if step is None:
+            return
+        self.fired = True
+        d = ck.dir / f"step_{step:010d}"
+        files = sorted(d.glob("shard*-of-*.npz")) or [d / "arrays.npz"]
+        target = files[self.shard % len(files)]
+        if self.mode == "delete":
+            target.unlink()
+        elif self.mode == "truncate":
+            blob = target.read_bytes()
+            target.write_bytes(blob[:max(1, len(blob) // 2)])
+        elif self.mode == "bitflip":
+            blob = bytearray(target.read_bytes())
+            blob[len(blob) // 2] ^= 0x01
+            target.write_bytes(bytes(blob))
+        else:
+            raise ValueError(f"unknown CorruptShard mode {self.mode!r}")
+        self.damaged = str(target)
 
 
 @dataclasses.dataclass
@@ -207,7 +300,7 @@ class FaultScript:
 
     def corrupt_state(self, st, it: int):
         for f in self.faults:
-            if isinstance(f, NaNChunk):
+            if isinstance(f, (NaNChunk, IndexCorruption)):
                 st = f.apply(st, it)
         return st
 
@@ -215,6 +308,11 @@ class FaultScript:
         for f in self.faults:
             if isinstance(f, Preemption):
                 f.check(it)
+
+    def maybe_corrupt_checkpoint(self, it: int, ck):
+        for f in self.faults:
+            if isinstance(f, CorruptShard):
+                f.check(it, ck)
 
     def maybe_host_loss(self, it: int):
         for f in self.faults:
@@ -255,6 +353,11 @@ def corrupt_state(st, it: int):
 def maybe_preempt(it: int):
     if _ACTIVE is not None:
         _ACTIVE.maybe_preempt(it)
+
+
+def maybe_corrupt_checkpoint(it: int, ck):
+    if _ACTIVE is not None and ck is not None:
+        _ACTIVE.maybe_corrupt_checkpoint(it, ck)
 
 
 def maybe_host_loss(it: int):
@@ -413,11 +516,135 @@ def scenario_host_loss(backend="interpret", tmpdir=None) -> dict:
         "spread_ratio": round(got / max(ref, 1e-9), 3)}
 
 
+def scenario_corrupt_restore(backend="interpret", tmpdir=None) -> dict:
+    """Damage the newest COMMITTED checkpoint (truncate / bit-flip /
+    delete a shard file) right after it lands, then kill the run: resume
+    detects the damage at restore time, falls back to the previous
+    verified boundary with a ``checkpoint_fallback`` event, and still
+    reproduces the uninterrupted run bit-for-bit (chunk boundaries are
+    bit-neutral, so replaying from one further back is exact).  With >=2
+    devices the same story runs through ``fit_elastic``'s host-loss
+    path: the lost host's per-shard checkpoint file is deleted and the
+    remesh resumes from the previous verified boundary."""
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import funcsne
+    from repro.core.resilience import ResiliencePolicy
+
+    X, cfg = _smoke_setup(backend=backend)
+    kw = dict(cfg=cfg, n_iter=16, chunk_size=4)
+    st_ref, _ = funcsne.fit(X, resilience=ResiliencePolicy(), **kw)
+
+    out = {}
+    for mode in ("truncate", "bitflip", "delete"):
+        tdir = tempfile.mkdtemp(prefix=f"funcsne-corrupt-{mode}-")
+        fault = CorruptShard(at_step=8, mode=mode)
+        try:
+            with active(FaultScript(fault, Preemption(at_step=8))):
+                funcsne.fit(X, resilience=ResiliencePolicy(
+                    checkpoint_dir=tdir, checkpoint_every=1), **kw)
+            raise AssertionError("preemption did not fire")
+        except Preempted:
+            pass
+        assert fault.damaged is not None, "CorruptShard never fired"
+        policy = ResiliencePolicy(checkpoint_dir=tdir, checkpoint_every=1)
+        st_res, _ = funcsne.fit(X, resilience=policy, resume_from=tdir,
+                                **kw)
+        fbs = [e for e in policy.events
+               if e["kind"] == "checkpoint_fallback"]
+        assert fbs and fbs[0]["step"] == 8, policy.events
+        np.testing.assert_array_equal(np.asarray(st_res.Y),
+                                      np.asarray(st_ref.Y))
+        assert int(st_res.step) == 16
+        out[mode] = {"fell_back_from": fbs[0]["step"]}
+        shutil.rmtree(tdir, ignore_errors=True)
+
+    import jax
+    if jax.device_count() < 2:
+        out["elastic"] = {"skipped":
+                          f"needs >=2 devices, have {jax.device_count()}"}
+        return out
+
+    from repro.runtime.coordinator import fit_elastic
+
+    ekw = dict(cfg=cfg, n_iter=16, chunk_size=4, n_hosts=2)
+    st_eref = fit_elastic(X, resilience=ResiliencePolicy(), **ekw)
+    tdir = tempfile.mkdtemp(prefix="funcsne-corrupt-elastic-")
+    policy = ResiliencePolicy(checkpoint_dir=tdir, checkpoint_every=1)
+    with active(FaultScript(CorruptShard(at_step=8, mode="delete"),
+                            HostLoss(at_step=8, host=1))):
+        st = fit_elastic(X, resilience=policy, **ekw)
+    kinds = [e["kind"] for e in policy.events]
+    assert "host_lost" in kinds and "remesh" in kinds, kinds
+    fbs = [e for e in policy.events if e["kind"] == "checkpoint_fallback"]
+    assert fbs and fbs[0]["step"] == 8, policy.events
+    assert int(st.step) == 16, int(st.step)
+    Y = np.asarray(st.Y)
+    assert bool(np.isfinite(Y).all()), "embedding not finite"
+    ref = float(np.std(np.asarray(st_eref.Y)))
+    got = float(np.std(Y))
+    assert 0.5 * ref <= got <= 2.0 * ref, (ref, got)
+    shutil.rmtree(tdir, ignore_errors=True)
+    out["elastic"] = {"fell_back_from": fbs[0]["step"],
+                      "spread_ratio": round(got / max(ref, 1e-9), 3)}
+    return out
+
+
+def scenario_index_audit(backend="interpret") -> dict:
+    """Poisoned ``hd_idx`` (out-of-range but FINITE values, invisible to
+    the NaN probes) trips the chunk-boundary auditor and the existing
+    rollback path, and the run finishes with a clean state.  Positive
+    control: with ``audit_every=0`` the same fault sails through -- no
+    rollback, and the final state fails an offline audit."""
+    import jax
+
+    from repro.core import funcsne
+    from repro.core.resilience import ResiliencePolicy
+
+    X, cfg = _smoke_setup(backend=backend)
+    kw = dict(cfg=cfg, n_iter=16, chunk_size=4)
+
+    policy = ResiliencePolicy(max_retries=2, audit_every=1)
+    with active(FaultScript(IndexCorruption(at_step=8, field="hd_idx"))):
+        st, _ = funcsne.fit(X, resilience=policy, **kw)
+    kinds = [e["kind"] for e in policy.events]
+    assert "audit_violation" in kinds and "rollback" in kinds, kinds
+    assert int(st.step) == 16, int(st.step)
+    final = policy.audit_check(
+        jax.device_get(funcsne.audit_state(st, cfg, X)))
+    assert final is None, f"final state dirty after rollback: {final}"
+    viol = next(e for e in policy.events
+                if e["kind"] == "audit_violation")
+
+    # positive control: auditor off -> nothing notices, the corruption
+    # survives to the end of the run (this is the blind spot the
+    # auditor closes; a regression that quietly stops auditing fails
+    # the first assert above, a regression that trips on CLEAN states
+    # fails this one)
+    ctrl = ResiliencePolicy(max_retries=2, audit_every=0)
+    with active(FaultScript(IndexCorruption(at_step=8, field="hd_idx"))):
+        st0, _ = funcsne.fit(X, resilience=ctrl, **kw)
+    kinds0 = [e["kind"] for e in ctrl.events]
+    assert "rollback" not in kinds0 and "audit_violation" not in kinds0, \
+        kinds0
+    missed = ctrl.audit_check(
+        jax.device_get(funcsne.audit_state(st0, cfg, X)))
+    assert missed is not None, \
+        "control run: the corruption disappeared without an audit"
+    return {"tripped": viol["reason"][:48],
+            "control_missed": missed[:48]}
+
+
 SCENARIOS = {
     "nan_rollback": scenario_nan_rollback,
     "kernel_fallback": scenario_kernel_fallback,
     "preempt_resume": scenario_preempt_resume,
     "host_loss": scenario_host_loss,
+    "corrupt_restore": scenario_corrupt_restore,
+    "index_audit": scenario_index_audit,
 }
 
 

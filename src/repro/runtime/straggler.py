@@ -4,9 +4,12 @@ At pod scale the scheduler cannot see inside an SPMD step; what it CAN see
 is the host-side step time.  StepTimeMonitor keeps an EWMA + variance of
 step durations and raises an alarm when a step exceeds
 ``mean + z_thresh * std`` (slow host / flaky ICI link / preempted worker)
-or an absolute ``hang_timeout``.  The Trainer responds by snapshotting a
-checkpoint early so a subsequent kill loses at most one step; at real scale
-the same signal drives the hot-spare remesh in ``repro.runtime.elastic``.
+or an absolute ``hang_timeout``.  ``funcsne.fit`` and
+``coordinator.fit_elastic`` respond by committing the current chunk
+boundary early -- a blocking checkpoint save (or a join of the in-flight
+one), logged as an ``early_checkpoint`` event -- so a subsequent kill
+loses at most one chunk; at real scale the same signal drives the
+hot-spare remesh in ``repro.runtime.elastic``.
 """
 from __future__ import annotations
 

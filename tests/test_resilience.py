@@ -397,3 +397,75 @@ def test_fit_state_continuation():
     st_half, _ = funcsne.fit(X, n_iter=4, **kw)
     st_cont, _ = funcsne.fit(X, n_iter=4, state=st_half, **kw)
     _assert_state_equal(st_full, st_cont)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-boundary state auditor in the fit loop (ISSUE 9)
+
+
+def test_audit_trips_rollback_in_fit_and_control_misses():
+    """Finite index corruption is invisible to the NaN probes; with
+    audit_every it trips the EXISTING rollback path, without it the
+    damage survives to the final state (the positive control)."""
+    from repro.runtime.faults import IndexCorruption
+
+    X, cfg = _data(), _cfg()
+    kw = dict(cfg=cfg, n_iter=16, chunk_size=4)
+
+    policy = ResiliencePolicy(max_retries=2, audit_every=1)
+    with faults.active(FaultScript(IndexCorruption(at_step=8))):
+        st, _ = funcsne.fit(X, resilience=policy, **kw)
+    kinds = [e["kind"] for e in policy.events]
+    assert "audit_violation" in kinds and "rollback" in kinds, kinds
+    assert int(st.step) == 16
+    res = jax.device_get(funcsne.audit_state(st, cfg, X))
+    assert policy.audit_check(res) is None
+
+    ctrl = ResiliencePolicy(max_retries=2, audit_every=0)
+    with faults.active(FaultScript(IndexCorruption(at_step=8))):
+        st0, _ = funcsne.fit(X, resilience=ctrl, **kw)
+    assert "rollback" not in [e["kind"] for e in ctrl.events]
+    res0 = jax.device_get(funcsne.audit_state(st0, cfg, X))
+    assert ctrl.audit_check(res0) is not None
+
+
+def test_clean_run_with_audit_is_bit_identical():
+    """Auditing is read-only: a clean run with audit_every=1 matches the
+    no-policy run bit for bit (same guarantee as the health probes)."""
+    X, cfg = _data(), _cfg()
+    kw = dict(cfg=cfg, n_iter=8, chunk_size=4)
+    st_plain, _ = funcsne.fit(X, **kw)
+    policy = ResiliencePolicy(audit_every=1)
+    st_aud, _ = funcsne.fit(X, resilience=policy, **kw)
+    _assert_state_equal(st_plain, st_aud)
+    assert not [e for e in policy.events
+                if e["kind"] in ("rollback", "audit_violation")]
+
+
+# ---------------------------------------------------------------------------
+# Straggler-alarm escalation: early checkpoint (ISSUE 9 satellite)
+
+
+def test_straggler_alarm_triggers_early_checkpoint(tmp_path):
+    """With the checkpoint cadence effectively off, every alarm must
+    still commit the just-advanced boundary (straggler.py's contract:
+    a kill after an alarm loses at most one chunk)."""
+    from repro.checkpoint import Checkpointer
+
+    X, cfg = _data(), _cfg()
+    # hang_timeout=0 makes every chunk dispatch an alarm; cadence 1000
+    # means every committed boundary below is escalation-only
+    policy = ResiliencePolicy(checkpoint_dir=str(tmp_path),
+                              checkpoint_every=1000,
+                              hang_timeout=0.0, straggler_warmup=0)
+    st, _ = funcsne.fit(X, cfg=cfg, n_iter=16, chunk_size=4,
+                        resilience=policy)
+    kinds = [e["kind"] for e in policy.events]
+    assert kinds.count("early_checkpoint") == 4, kinds
+    ck = Checkpointer(tmp_path)
+    assert ck.latest_step() == 16
+    # the escalated boundary is a real, verified, resumable checkpoint
+    st_res, _ = funcsne.fit(X, cfg=cfg, n_iter=16, chunk_size=4,
+                            resilience=ResiliencePolicy(),
+                            resume_from=str(tmp_path))
+    _assert_state_equal(st, st_res)
