@@ -8,7 +8,11 @@ Design (single-host container standing in for a multi-host pod):
     shard file (``host_shard_filter`` + ``host_id``/``n_hosts``): parts are
     staged under the shared tmp dir and the host that completes the set
     commits, so checkpoint I/O scales with hosts instead of funnelling
-    through one.
+    through one.  Elastic control planes additionally tag shards with a
+    ``generation`` (``shard<h>-of-<H>-g<G>.npz``): the completing writer
+    evicts stale-generation leftovers from the staging dir and the
+    reader loads only the committing generation's manifest entries, so a
+    half-dead generation's shards can never merge with a relaunch's.
   - integrity manifest: every save records, in ``meta.json``, a per-shard
     CRC32 of the file bytes plus an array manifest (key, dtype, shape,
     row range) -- computed from the in-memory bytes it is about to write,
@@ -220,7 +224,8 @@ class Checkpointer:
 
     def save(self, step: int, tree: Any, metadata: dict = None,
              blocking: bool = False, host_shard_filter: Callable = None,
-             host_id: int = 0, n_hosts: int = 1):
+             host_id: int = 0, n_hosts: int = 1,
+             generation: Optional[int] = None):
         """Snapshot is taken synchronously (device_get); I/O is async.
 
         ``host_shard_filter(key, array)`` selects what THIS host writes:
@@ -230,6 +235,19 @@ class Checkpointer:
         ``n_hosts > 1`` each host stages ``shard<h>-of-<H>.npz`` under
         the shared tmp dir and the host completing the set commits; a
         step directory is therefore only ever visible fully merged.
+
+        ``generation`` (elastic runtimes: the pod-incarnation number the
+        control plane bumps on every relaunch) tags the shard files --
+        ``shard<h>-of-<H>-g<G>.npz`` -- and is recorded in the metadata.
+        The completing writer only counts ITS generation's parts toward
+        the set and EVICTS every stale-generation file still staged in
+        the tmp dir before committing, so shards written by a generation
+        that died mid-checkpoint can never be merged into a later
+        generation's boundary (the reader additionally loads only the
+        files named by the committing generation's manifest).  With a
+        generation the staged-shard layout is used even for
+        ``n_hosts == 1``, keeping tag semantics uniform across remesh
+        widths.
         """
         self.wait()
         host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
@@ -237,6 +255,8 @@ class Checkpointer:
         meta["step"] = int(step)
         meta["time"] = time.time()
         meta["n_hosts"] = int(n_hosts)
+        if generation is not None:
+            meta["generation"] = int(generation)
 
         flat, arrays_meta = {}, {}
         for key, arr in _flatten(host_tree).items():
@@ -267,7 +287,9 @@ class Checkpointer:
                 file_meta = {"crc32": zlib.crc32(blob) & 0xFFFFFFFF,
                              "arrays": arrays_meta}
                 tmp = self.dir / f".tmp-{step}"
-                if n_hosts == 1:
+                gen_tag = "" if generation is None \
+                    else f"-g{int(generation):06d}"
+                if n_hosts == 1 and generation is None:
                     if tmp.exists():
                         shutil.rmtree(tmp)
                     tmp.mkdir(parents=True)
@@ -280,14 +302,15 @@ class Checkpointer:
                     # manifest sidecar BEFORE the npz becomes visible, so
                     # a visible shard always has its manifest on disk.
                     tmp.mkdir(parents=True, exist_ok=True)
-                    part = tmp / f"shard{host_id:03d}-of-{n_hosts:03d}.npz"
+                    part = tmp / (f"shard{host_id:03d}-of-{n_hosts:03d}"
+                                  f"{gen_tag}.npz")
                     (tmp / (part.name + _MANIFEST_SUFFIX)).write_text(
                         json.dumps(file_meta))
                     part_tmp = part.with_suffix(".npz.tmp")
                     part_tmp.write_bytes(blob)
                     os.replace(part_tmp, part)
                     parts = sorted(
-                        tmp.glob(f"shard*-of-{n_hosts:03d}.npz"))
+                        tmp.glob(f"shard*-of-{n_hosts:03d}{gen_tag}.npz"))
                     if len(parts) < n_hosts:
                         return          # another host completes the set
                     files = {}
@@ -295,6 +318,21 @@ class Checkpointer:
                         side = tmp / (p.name + _MANIFEST_SUFFIX)
                         files[p.name] = json.loads(side.read_text())
                         side.unlink()
+                    if generation is not None:
+                        # completing writer owns the commit: any file
+                        # still staged that is NOT part of this
+                        # generation's set is a stale shard (or torn
+                        # tmp/sidecar) from a generation that died
+                        # mid-checkpoint -- evict it so it can neither
+                        # merge into this boundary nor linger on disk
+                        keep = {p.name for p in parts}
+                        evicted = []
+                        for f in sorted(tmp.iterdir()):
+                            if f.name not in keep:
+                                f.unlink()
+                                evicted.append(f.name)
+                        if evicted:
+                            meta["evicted_stale"] = evicted
                     meta["manifest"] = {"n_hosts": n_hosts, "files": files}
                 (tmp / "meta.json").write_text(json.dumps(meta))
                 final = self.dir / f"step_{step:010d}"
@@ -374,14 +412,24 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def _load_merged(self, d: Path) -> dict:
+    def _load_merged(self, d: Path, meta: Optional[dict] = None) -> dict:
         """Load one committed step dir, merging per-host shard files:
         plain keys load as-is, ``key||@rows<start>`` slices concat by
         offset.  The single-host ``arrays.npz`` layout is the n_hosts=1
-        special case of the same reader."""
-        files = sorted(d.glob("shard*-of-*.npz"))
-        if not files:
-            files = [d / "arrays.npz"]
+        special case of the same reader.
+
+        When ``meta`` carries a manifest, ONLY the files it names are
+        read: the manifest was written by the generation that committed
+        the boundary, so a stale-generation shard that somehow survived
+        into the directory is filtered out rather than merged (the
+        verifying reader additionally flags it as a stray)."""
+        man = (meta or {}).get("manifest")
+        if isinstance(man, dict) and man.get("files"):
+            files = [d / name for name in sorted(man["files"])]
+        else:
+            files = sorted(d.glob("shard*-of-*.npz"))
+            if not files:
+                files = [d / "arrays.npz"]
         flat, sliced = {}, {}
         for f in files:
             with np.load(f, allow_pickle=False) as z:
@@ -547,7 +595,7 @@ class Checkpointer:
         else:
             meta = json.loads((d / "meta.json").read_text())
         self._check_compat(d, step, meta, expect_compat)
-        flat = self._load_merged(d)
+        flat = self._load_merged(d, meta)
         tree = _unflatten_into(like_tree, flat)
         tree = jax.tree.map(
             lambda ref, x: np.asarray(x).astype(ref.dtype).reshape(ref.shape),

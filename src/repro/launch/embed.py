@@ -73,9 +73,35 @@ def main():
                     help="run the chunk-boundary state auditor every N "
                          "healthy chunks (0 = off); a violation rolls "
                          "back like any health-probe trip")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help=">1 joins a real multi-process pod: every "
+                         "process runs this command with the same "
+                         "--coordinator and a distinct --process-id")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank in the pod "
+                         "(required when --num-processes > 1)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0's distributed "
+                         "coordinator (required when "
+                         "--num-processes > 1)")
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")
+
+    multiprocess = args.num_processes > 1
+    if multiprocess:
+        if args.process_id is None or args.coordinator is None:
+            ap.error("--num-processes > 1 requires --process-id "
+                     "and --coordinator")
+        if args.hosts != 1:
+            ap.error("--hosts simulates a pod on one process; a real "
+                     "multi-process pod must keep --hosts 1")
+        # must run before any JAX device use: join the pod, then the
+        # elastic path below spans every process's devices
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(coordinator_address=args.coordinator,
+                                   num_processes=args.num_processes,
+                                   process_id=args.process_id)
 
     X, labels = load_dataset(args.dataset, args.n)
     Xj = jnp.asarray(X, jnp.float32)
@@ -88,7 +114,7 @@ def main():
     hp = funcsne.default_hparams(n, alpha=args.alpha,
                                  perplexity=args.perplexity)
 
-    if args.devices > 1:
+    if args.devices > 1 or multiprocess:
         # distributed path: the elastic coordinator owns the loop
         # (mesh-reduced health probes, per-host checkpoint shards,
         # remesh-and-resume on host loss)
@@ -97,7 +123,13 @@ def main():
         policy = ResiliencePolicy(checkpoint_dir=args.checkpoint_dir,
                                   audit_every=args.audit_every) \
             if args.checkpoint_dir or args.audit_every else None
-        devices = jax.devices()[:args.devices]
+        if multiprocess:
+            # the pod's mesh spans every process's devices; each
+            # process checkpoints only its own row shard
+            devices = jax.devices()
+        else:
+            devices = jax.devices()[:args.devices]
+        first = jax.process_index() == 0
         t0 = time.time()
         st = fit_elastic(Xj, cfg=cfg, n_iter=iters, chunk_size=T,
                          hparams=hp, n_hosts=args.hosts,
@@ -108,13 +140,15 @@ def main():
         jax.block_until_ready(st.Y)
         dt = time.time() - t0
         Y = np.asarray(jax.device_get(st.Y))
-        q = float(embedding_quality(jnp.asarray(X), jnp.asarray(Y)))
-        print(f"[embed] {args.dataset} n={n} iters={iters} chunk={T} "
-              f"devices={len(devices)} hosts={args.hosts}: {dt:.1f}s "
-              f"(compile included), R_NX AUC={q:.3f}")
-        if args.out:
-            np.save(args.out, Y)
-            print(f"[embed] wrote {args.out}")
+        if first:
+            q = float(embedding_quality(jnp.asarray(X), jnp.asarray(Y)))
+            print(f"[embed] {args.dataset} n={n} iters={iters} chunk={T} "
+                  f"devices={len(devices)} hosts={args.hosts} "
+                  f"processes={args.num_processes}: {dt:.1f}s "
+                  f"(compile included), R_NX AUC={q:.3f}")
+            if args.out:
+                np.save(args.out, Y)
+                print(f"[embed] wrote {args.out}")
         return
 
     if args.checkpoint_dir or args.audit_every:

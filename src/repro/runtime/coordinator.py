@@ -25,11 +25,23 @@ across the remesh; the replayed steps differ from the uninterrupted
 run only by the collective reduction grouping of the smaller mesh
 (fp32-level, quality-neutral -- pinned in tests/test_elastic_resume.py).
 
-This file simulates the pod inside one process (host = contiguous
-device block, loss = an injected fault); the real multi-process
-control plane (heartbeats, jax.distributed re-init barrier) is the
-remaining ROADMAP item and slots in where ``faults.maybe_host_loss``
-is called today.
+The loop runs in two deployment shapes:
+
+  * **simulated pod** (default, one Python process): hosts are
+    contiguous device blocks, loss is an injected ``faults.HostLost``,
+    and the HostLost handler below remeshes in-process -- the CI-sized
+    harness every elastic test drives;
+  * **real multi-process pod** (``jax.process_count() > 1``, i.e. the
+    caller ran ``jax.distributed.initialize``): every process executes
+    this same loop SPMD, each writes ONLY its own generation-tagged
+    checkpoint shard (``host_id=jax.process_index()``), and liveness is
+    proven through the ``on_boundary`` heartbeat hook.  A real process
+    death is NOT handled here -- a survivor cannot re-initialise
+    ``jax.distributed`` in-process after a peer dies (jaxlib aborts), so
+    the supervisor in ``repro.runtime.control`` kills the whole worker
+    generation and relaunches it over the survivors on a fresh
+    coordinator port; the relaunched generation re-enters this function
+    with ``resume_from=`` pointing at the last committed boundary.
 """
 from __future__ import annotations
 
@@ -55,7 +67,9 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
                 schedule: Callable = None, init: str = "pca",
                 n_hosts: int = 1, model: int = 1,
                 devices: Optional[Sequence] = None,
-                resilience=None, state=None, resume_from=None):
+                resilience=None, state=None, resume_from=None,
+                on_boundary: Optional[Callable[[int], None]] = None,
+                generation: Optional[int] = None):
     """``funcsne.fit``'s rollback/checkpoint loop on a device mesh, with
     elastic resume across simulated host loss.  Returns the final
     :class:`~repro.core.funcsne.FuncSNEState` (replicated on the
@@ -73,6 +87,19 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
     is survivable only when ``resilience.checkpoint_dir`` is set and at
     least one boundary committed; otherwise it propagates (there is
     nothing to resume from).
+
+    ``on_boundary(it)`` is called after every committed chunk boundary
+    (and once at entry with the starting step): the liveness hook the
+    multi-process control plane uses to bump the pod's heartbeat
+    counter.  It must be cheap and must not raise.
+
+    Under ``jax.distributed`` (``jax.process_count() > 1``) every
+    process runs this loop SPMD over the global device set; checkpoint
+    writes automatically switch to one generation-tagged shard per
+    process (``generation`` defaults to 0 there) and the process-local
+    straggler alarm only logs -- an early checkpoint decided by one
+    process's clock would stage an incomplete shard set.  ``n_hosts``
+    must stay 1 in that mode (the real process set IS the pod).
     """
     Xh = jnp.asarray(X, jnp.float32)
     if rng is None:
@@ -89,6 +116,16 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
     devices = list(jax.devices() if devices is None else devices)
     if not 1 <= n_hosts <= len(devices):
         raise ValueError(f"n_hosts={n_hosts} for {len(devices)} devices")
+    n_procs = jax.process_count()
+    multiprocess = n_procs > 1
+    if multiprocess:
+        if n_hosts != 1:
+            raise ValueError(
+                "n_hosts simulates pods in single-process mode; under "
+                "jax.distributed the process set IS the pod (n_hosts=1)")
+        if generation is None:
+            generation = 0
+    beat = on_boundary if on_boundary is not None else (lambda _it: None)
 
     policy = resilience
     log = policy.log if policy is not None else (lambda *a, **k: None)
@@ -146,24 +183,38 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
         start_it = int(meta["step"])
         lr_scale = float(meta.get("lr_scale", 1.0))
         ex_scale = float(meta.get("ex_scale", 1.0))
+        log("restore", step=start_it, source=str(resume_from),
+            from_generation=meta.get("generation"))
     st = jax.device_put(st, repl)
 
     def save_all_hosts(it, st, blocking=False):
+        meta = {"lr_scale": lr_scale, "ex_scale": ex_scale,
+                "compat": cfg_compat(cfg)}
+        if multiprocess:
+            # real pod: THIS process writes only its own generation-
+            # tagged row shard; whichever process completes the set
+            # commits the merged step dir (and evicts any stale shards
+            # a dead generation left staged)
+            ck.save(it, st, metadata=meta, blocking=blocking,
+                    host_shard_filter=row_shard_filter(
+                        jax.process_index(), n_procs, cfg.n_points),
+                    host_id=jax.process_index(), n_hosts=n_procs,
+                    generation=generation)
+            return
         # one save() per simulated host: each writes only its row slice
         # (+ host 0 the replicated leaves); the completing write commits
         # the merged step dir.  save() joins the previous write first,
         # so the per-host writes serialise the way distinct hosts would
         # proceed independently.
-        meta = {"lr_scale": lr_scale, "ex_scale": ex_scale,
-                "compat": cfg_compat(cfg)}
         if n_hosts == 1:
-            ck.save(it, st, metadata=meta, blocking=blocking)
+            ck.save(it, st, metadata=meta, blocking=blocking,
+                    generation=generation)
             return
         for h in range(n_hosts):
             ck.save(it, st, metadata=meta,
                     host_shard_filter=row_shard_filter(
                         h, n_hosts, cfg.n_points),
-                    host_id=h, n_hosts=n_hosts)
+                    host_id=h, n_hosts=n_hosts, generation=generation)
         if blocking:
             ck.wait()
 
@@ -178,6 +229,7 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
         stack.enter_context(guard)
         if ck is not None:
             stack.callback(ck.close)    # flush on every exit path
+        beat(it)    # entry beat: the pod is alive before first compile
         while it < n_iter:
             T = min(chunk_size, n_iter - it)
             if T not in chunks:
@@ -225,6 +277,7 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
                     log("rollback", step=it, reason=reason,
                         retry=retries, lr_scale=lr_scale,
                         ex_scale=ex_scale)
+                    beat(it)    # a retry storm is alive, not dead
                     continue
                 retries = 0
             st = st_out
@@ -235,14 +288,19 @@ def fit_elastic(X, *, cfg: "funcsne.FuncSNEConfig" = None,
                     saved = n_healthy % policy.checkpoint_every == 0
                     if saved:
                         save_all_hosts(it, st)
-                    if alarm is not None:
+                    if alarm is not None and not multiprocess:
                         # hang/straggler escalation: commit this
-                        # boundary now so a kill loses at most one chunk
+                        # boundary now so a kill loses at most one chunk.
+                        # Multi-process pods skip this: the alarm is
+                        # decided by ONE process's clock, and a shard
+                        # set only some processes stage never commits
+                        # (the straggler event above still logs).
                         if saved:
                             ck.wait()
                         else:
                             save_all_hosts(it, st, blocking=True)
                         log("early_checkpoint", step=it, alarm=alarm)
+            beat(it)
             faults.maybe_corrupt_checkpoint(it, ck)
             faults.maybe_preempt(it)
             try:

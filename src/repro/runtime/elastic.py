@@ -21,7 +21,8 @@ through ``on_event``) are recorded in a module event log (:func:`events`)
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Sequence
 
 import jax
 
@@ -94,6 +95,83 @@ def remesh(n_devices: int = None, *, model: int = 16,
                             devices=devices[:used])
 
 
-def surviving_pods(heartbeats: dict, timeout_s: float, now: float) -> list:
-    """Pod ids whose last heartbeat is fresh."""
-    return [p for p, t in sorted(heartbeats.items()) if now - t <= timeout_s]
+# --------------------------------------------------------------------------
+# Heartbeat liveness: the observer-stamped beat-counter contract.
+#
+# Pods prove liveness by BUMPING A COUNTER (in a per-pod heartbeat file,
+# at every chunk boundary), never by writing a timestamp: wall clocks on
+# different hosts are not comparable, and even a "recent-looking" remote
+# timestamp says nothing once the writer's clock skews.  The observer
+# (the supervisor in ``repro.runtime.control``) stamps each counter
+# *change* with its OWN ``time.monotonic()``; freshness is then a purely
+# observer-local question -- "how long since I last saw this pod make
+# progress" -- immune to skew, NTP steps and paused clocks on the pods.
+
+
+@dataclasses.dataclass
+class Beat:
+    """One pod's liveness record, as seen by the observer.
+
+    ``counter`` is the last beat value the pod published (opaque --
+    equality is the only operation; tuples like ``(generation, k)``
+    work).  ``stamped`` is the observer's ``time.monotonic()`` at the
+    moment the counter last CHANGED (first observation included).
+    ``changes`` counts observed changes since the first observation --
+    0 means the pod has published but never been seen to progress, which
+    callers use to apply a startup grace period (first progress includes
+    runtime init + compile)."""
+    counter: Hashable
+    stamped: float
+    changes: int = 0
+
+
+class HeartbeatObserver:
+    """Stamps beat-counter changes with the observer's monotonic clock.
+
+    ``observe(pod, counter, now)`` records ``now`` as the pod's
+    freshness time iff ``counter`` differs from the last one seen (or
+    the pod is new); re-observing an unchanged counter never refreshes,
+    so a wedged pod whose stale file keeps being re-read goes stale on
+    schedule.  ``now`` must come from the observer's own clock
+    (``time.monotonic()``) -- never from anything the pod wrote."""
+
+    def __init__(self):
+        self.beats: Dict[Hashable, Beat] = {}
+
+    def observe(self, pod, counter, now: float) -> bool:
+        """Record one reading; returns True when it counted as progress."""
+        b = self.beats.get(pod)
+        if b is None:
+            self.beats[pod] = Beat(counter, float(now))
+            return True
+        if counter != b.counter:
+            b.counter = counter
+            b.stamped = float(now)
+            b.changes += 1
+            return True
+        return False
+
+    def forget(self, pod) -> None:
+        self.beats.pop(pod, None)
+
+    def survivors(self, timeout_s: float, now: float) -> list:
+        return surviving_pods(self.beats, timeout_s, now)
+
+
+def surviving_pods(beats: dict, timeout_s: float, now: float) -> list:
+    """Pod ids whose beat counter changed within ``timeout_s`` of ``now``.
+
+    ``beats`` maps pod id -> :class:`Beat` (or a ``(counter, stamped)``
+    tuple), where ``stamped`` is the OBSERVER's monotonic time of the
+    last counter change -- see :class:`HeartbeatObserver`.  A
+    boundary-equal gap (``now - stamped == timeout_s``) counts fresh:
+    the timeout is the first instant a pod may be declared dead, not the
+    last instant it may be declared alive, so detection latency bounds
+    stay closed under equality.  Pod wall clocks never enter the
+    comparison."""
+    out = []
+    for pod, b in sorted(beats.items()):
+        stamped = b.stamped if isinstance(b, Beat) else b[1]
+        if now - float(stamped) <= timeout_s:
+            out.append(pod)
+    return out

@@ -25,6 +25,16 @@ Every recovery path in ``funcsne.fit``'s resilience layer is exercised by
                              quiesces the survivors, re-forms the mesh
                              over the remaining devices and resumes
                              from the last committed chunk boundary.
+  :class:`ProcessKill`       SIGKILLs the worker process itself at a
+                             chunk boundary -- the REAL death
+                             :class:`HostLoss` only simulates; nothing
+                             in-process survives it, so the test
+                             payload is the supervisor/worker control
+                             plane (``repro.runtime.control``): the
+                             supervisor must detect the lost heartbeat,
+                             kill the generation, re-form the pod over
+                             the survivors and relaunch from the last
+                             committed generation-tagged checkpoint.
   :class:`CorruptShard`      damages the newest COMMITTED checkpoint on
                              disk (truncate / bit-flip / delete one
                              shard file) at a chunk boundary -- the
@@ -274,6 +284,36 @@ class Preemption:
 
 
 @dataclasses.dataclass
+class ProcessKill:
+    """SIGKILL THIS process at the first chunk boundary ``>= at_chunk``,
+    iff it is running as pod ``pod`` -- the real-death analogue of
+    :class:`HostLoss`.  ``os.kill(getpid(), SIGKILL)`` is deliberate:
+    no atexit, no flushes, no JAX teardown, exactly what ``kill -9`` on
+    a worker looks like.  The in-process runtime cannot survive this by
+    construction; recovery is the supervisor's job
+    (``repro.runtime.control``: kill the generation, re-form the pod
+    over the survivors, relaunch from the last committed boundary).
+    Checked from the worker's ``on_boundary`` hook via
+    :func:`maybe_process_kill` -- after the boundary's checkpoint save
+    has been *dispatched*, so the kill races a possibly-in-flight write
+    the way a real signal does (generation-tagged shards make the torn
+    leftovers harmless)."""
+    at_chunk: int
+    pod: int = 1
+    once: bool = True
+    fired: bool = False
+
+    def check(self, it: int, pod: int):
+        if pod != self.pod or (self.fired and self.once) \
+                or it < self.at_chunk:
+            return
+        self.fired = True
+        import os
+        import signal
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+@dataclasses.dataclass
 class HostLoss:
     """Raise :class:`HostLost` at the first chunk boundary ``>= at_step``:
     simulated death of host ``host`` (its whole device block).  Unlike
@@ -319,6 +359,11 @@ class FaultScript:
             if isinstance(f, HostLoss):
                 f.check(it)
 
+    def maybe_process_kill(self, it: int, pod: int):
+        for f in self.faults:
+            if isinstance(f, ProcessKill):
+                f.check(it, pod)
+
     def check_kernel(self, family: str):
         for f in self.faults:
             if isinstance(f, KernelLaunchFault):
@@ -363,6 +408,11 @@ def maybe_corrupt_checkpoint(it: int, ck):
 def maybe_host_loss(it: int):
     if _ACTIVE is not None:
         _ACTIVE.maybe_host_loss(it)
+
+
+def maybe_process_kill(it: int, pod: int):
+    if _ACTIVE is not None:
+        _ACTIVE.maybe_process_kill(it, pod)
 
 
 def check_kernel(family: str):
@@ -638,6 +688,95 @@ def scenario_index_audit(backend="interpret") -> dict:
             "control_missed": missed[:48]}
 
 
+def scenario_process_kill(backend="interpret", tmpdir=None) -> dict:
+    """THE real-death gate: a 2-process CPU pod (gloo collectives under
+    ``jax.distributed``), one worker SIGKILLs itself mid-run, and the
+    supervisor must finish the embedding anyway -- heartbeat-loss
+    detection, generation kill, remesh over the survivor, resume from
+    the last committed generation-tagged boundary.  Asserts the
+    structured event trail, the final committed step, no orphaned
+    worker processes and no stale-generation shards on disk."""
+    import os
+
+    if os.environ.get("FUNCSNE_NO_MULTIPROCESS") == "1":
+        return {"skipped": "FUNCSNE_NO_MULTIPROCESS=1"}
+
+    from repro.runtime import control
+
+    if not control.gloo_available():
+        return {"skipped": "no gloo CPU collectives in this jaxlib"}
+
+    import shutil
+    import tempfile
+
+    if tmpdir is None:
+        tmpdir = tempfile.mkdtemp(prefix="funcsne-prockill-")
+    n_iter, chunk = 16, 4
+    sup = control.Supervisor(
+        tmpdir, n_pods=2, n_iter=n_iter, chunk_size=chunk, n=64, dim=6,
+        backend=backend, kill_pod=1, kill_at_chunk=8,
+        heartbeat_timeout=20.0, total_timeout=480.0,
+        # pin workers to 1 local device each: the scenario may itself
+        # run under --xla_force_host_platform_device_count
+        extra_env={"XLA_FLAGS": ""})
+    report = sup.run()
+
+    # the survivor finished every iteration and committed the boundary
+    assert report["result"]["step"] == n_iter, report["result"]
+    assert report["result"]["finite"], report["result"]
+    assert report["generations"] == 2, report["generations"]
+    steps = control.committed_steps(sup.ckpt_dir)
+    assert steps and steps[-1] == n_iter, steps
+
+    # structured trail, in causal order:
+    # heartbeat_lost -> generation_killed -> remesh -> restore
+    kinds = [e["kind"] for e in report["trail"]]
+    order = [kinds.index(k) for k in
+             ("heartbeat_lost", "generation_killed", "remesh", "restore")]
+    assert order == sorted(order), kinds
+    lost = next(e for e in report["trail"]
+                if e["kind"] == "heartbeat_lost")
+    assert lost["pod"] == 1, lost
+    rem = next(e for e in report["trail"] if e["kind"] == "remesh")
+    assert rem["survivors"] == [0] and rem["n_processes"] == 1, rem
+    restore = next(e for e in report["trail"] if e["kind"] == "restore")
+    assert restore["generation"] == 1, restore
+    assert 0 < restore["step"] < n_iter, restore
+
+    # no orphaned processes: every pid the supervisor ever spawned is
+    # gone (ESRCH) or at worst a reaped zombie of OUR process (none --
+    # the supervisor wait()s everything it kills)
+    import errno
+    for pid in report["pids"]:
+        try:
+            os.kill(pid, 0)
+            raise AssertionError(f"orphaned worker pid {pid}")
+        except OSError as e:
+            assert e.errno == errno.ESRCH, e
+
+    # no stale-generation shards: every committed step dir holds ONLY
+    # files named by its own manifest, and the final boundary belongs
+    # to the surviving generation
+    import json as _json
+    for s in steps:
+        d = sup.ckpt_dir / f"step_{s:010d}"
+        meta = _json.loads((d / "meta.json").read_text())
+        want = set(meta["manifest"]["files"])
+        have = {p.name for p in d.glob("*.npz")}
+        assert have == want, (s, have, want)
+        gen = meta.get("generation")
+        tag = f"-g{gen:06d}.npz"
+        assert all(f.endswith(tag) for f in want), (s, gen, want)
+    final_meta = _json.loads(
+        (sup.ckpt_dir / f"step_{steps[-1]:010d}" / "meta.json")
+        .read_text())
+    assert final_meta.get("generation") == 1, final_meta
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    return {"resumed_at": restore["step"],
+            "final_step": report["result"]["step"],
+            "generations": report["generations"]}
+
+
 SCENARIOS = {
     "nan_rollback": scenario_nan_rollback,
     "kernel_fallback": scenario_kernel_fallback,
@@ -645,6 +784,7 @@ SCENARIOS = {
     "host_loss": scenario_host_loss,
     "corrupt_restore": scenario_corrupt_restore,
     "index_audit": scenario_index_audit,
+    "process_kill": scenario_process_kill,
 }
 
 

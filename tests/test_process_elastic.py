@@ -1,0 +1,192 @@
+"""Multi-process elastic runtime: observer-stamped heartbeat liveness,
+generation-tagged checkpoint shards, and the supervisor/worker control
+plane (``repro.runtime.control``).
+
+The fast tests exercise the pure contracts (no subprocesses, no
+collectives).  The ``slow``-marked integration test runs the real
+thing: a supervisor, two worker processes joined under gloo CPU
+collectives, a SIGKILL mid-run, and a verified resume -- via the same
+``process_kill`` smoke scenario the CI gate runs, in a subprocess so
+its ``jax.distributed`` state never leaks into this interpreter.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (CheckpointCorrupt, Checkpointer,
+                                           row_shard_filter)
+from repro.runtime.elastic import Beat, HeartbeatObserver, surviving_pods
+
+
+# --------------------------------------------------------------------------
+# Heartbeat freshness: counters + observer clock, never pod wall clocks
+
+
+def test_surviving_pods_ignores_pod_clocks():
+    # pod 1's counter (3) could be a wildly skewed timestamp for all the
+    # observer cares -- freshness comes only from the observer's stamp
+    beats = {0: (7, 100.0), 1: (3, 50.0)}
+    assert surviving_pods(beats, timeout_s=30.0, now=110.0) == [0]
+    # both fresh when the observer saw both recently
+    assert surviving_pods(beats, timeout_s=70.0, now=110.0) == [0, 1]
+
+
+def test_boundary_equal_gap_counts_fresh():
+    # now - stamped == timeout is the FIRST instant a pod may be
+    # declared dead, not the last instant it may be declared alive
+    beats = {0: Beat(counter=5, stamped=100.0)}
+    assert surviving_pods(beats, timeout_s=10.0, now=110.0) == [0]
+    assert surviving_pods(beats, timeout_s=10.0, now=110.0001) == []
+
+
+def test_observer_stamps_changes_only():
+    obs = HeartbeatObserver()
+    assert obs.observe("a", 1, now=0.0)          # first sighting stamps
+    # re-reading the same stale file never refreshes: the pod goes
+    # stale on schedule even though the observer keeps polling it
+    for t in (1.0, 5.0, 9.0):
+        assert not obs.observe("a", 1, now=t)
+    assert obs.survivors(timeout_s=8.0, now=9.0) == []
+    # a counter change re-stamps with the OBSERVER's time of sighting
+    assert obs.observe("a", 2, now=9.0)
+    assert obs.survivors(timeout_s=8.0, now=9.0) == ["a"]
+
+
+def test_observer_startup_grace_signal_and_forget():
+    obs = HeartbeatObserver()
+    obs.observe("a", 1, now=0.0)
+    # changes == 0: published but never seen to progress -- the
+    # supervisor applies the (long) startup grace to this state
+    assert obs.beats["a"].changes == 0
+    obs.observe("a", 2, now=3.0)
+    assert obs.beats["a"].changes == 1   # steady-state timeout applies
+    obs.forget("a")
+    assert obs.survivors(timeout_s=100.0, now=3.0) == []
+
+
+def test_tuple_counters_cross_generations():
+    # the control plane publishes (generation, k): a relaunched worker
+    # restarting its local counter at 1 still reads as progress because
+    # the tuple differs -- equality is the only operation on counters
+    obs = HeartbeatObserver()
+    obs.observe(0, (0, 9), now=0.0)
+    assert not obs.observe(0, (0, 9), now=50.0)
+    assert obs.observe(0, (1, 1), now=50.0)
+    assert obs.survivors(timeout_s=10.0, now=55.0) == [0]
+
+
+# --------------------------------------------------------------------------
+# Generation-tagged checkpoint shards
+
+
+def _tree(seed, n=12, d=3):
+    rng = np.random.default_rng(seed)
+    return {"Y": rng.normal(size=(n, d)).astype(np.float32),
+            "step": np.int32(seed)}
+
+
+def _save_shard(ck, step, tree, host_id, n_hosts, generation, n=12):
+    ck.save(step, tree, blocking=True, host_id=host_id, n_hosts=n_hosts,
+            generation=generation,
+            host_shard_filter=row_shard_filter(host_id, n_hosts, n))
+
+
+def test_generation_tagged_shard_roundtrip(tmp_path):
+    tree = _tree(7)
+    # two writers (as two Checkpointer handles on the shared dir, like
+    # two processes); the completing one commits the merged boundary
+    _save_shard(Checkpointer(tmp_path), 4, tree, 0, 2, generation=3)
+    assert not (tmp_path / "step_0000000004").exists()   # half-staged
+    _save_shard(Checkpointer(tmp_path), 4, tree, 1, 2, generation=3)
+    d = tmp_path / "step_0000000004"
+    names = sorted(p.name for p in d.glob("*.npz"))
+    assert names == ["shard000-of-002-g000003.npz",
+                     "shard001-of-002-g000003.npz"]
+    got, meta = Checkpointer(tmp_path).restore(_tree(0))
+    assert meta["generation"] == 3
+    np.testing.assert_array_equal(got["Y"], tree["Y"])
+
+
+def test_stale_generation_shard_evicted_on_commit(tmp_path):
+    # generation 0 died after staging only host 0's shard of step 8;
+    # generation 1 (remeshed to one host) checkpoints the same step
+    _save_shard(Checkpointer(tmp_path), 8, _tree(0), 0, 2, generation=0)
+    _save_shard(Checkpointer(tmp_path), 8, _tree(1), 0, 1, generation=1)
+    d = tmp_path / "step_0000000008"
+    names = sorted(p.name for p in d.iterdir())
+    assert names == ["meta.json", "shard000-of-001-g000001.npz"]
+    meta = json.loads((d / "meta.json").read_text())
+    assert meta["generation"] == 1
+    # the completing writer recorded exactly what it swept out
+    assert any("g000000" in f for f in meta["evicted_stale"])
+    got, _ = Checkpointer(tmp_path).restore(_tree(9))
+    np.testing.assert_array_equal(got["Y"], _tree(1)["Y"])
+
+
+def test_manifest_filters_planted_stray_shard(tmp_path):
+    _save_shard(Checkpointer(tmp_path), 8, _tree(1), 0, 1, generation=1)
+    d = tmp_path / "step_0000000008"
+    # a stale-generation shard that somehow survived into the committed
+    # dir: the manifest-driven reader must not merge it ...
+    np.savez(d / "shard000-of-001-g000000.npz",
+             **{"Y||@rows0": _tree(0)["Y"]})
+    got, _ = Checkpointer(tmp_path).restore(_tree(9), verify=False)
+    np.testing.assert_array_equal(got["Y"], _tree(1)["Y"])
+    # ... and the verifying reader flags it as a stray
+    with pytest.raises(CheckpointCorrupt, match="not in manifest"):
+        Checkpointer(tmp_path).verify_step(8)
+
+
+# --------------------------------------------------------------------------
+# Supervisor-side helpers (JAX-free)
+
+
+def test_committed_steps_listing(tmp_path):
+    from repro.runtime import control
+    for s, committed in [(4, True), (8, True), (12, False)]:
+        d = tmp_path / f"step_{s:010d}"
+        d.mkdir()
+        if committed:
+            (d / "meta.json").write_text("{}")
+    assert control.committed_steps(tmp_path) == [4, 8]
+    assert control.committed_steps(tmp_path / "missing") == []
+
+
+def test_beat_writer_feeds_observer(tmp_path):
+    from repro.runtime import control
+    beat = control._beat_writer(tmp_path, pod=1, generation=2)
+    obs = HeartbeatObserver()
+    for it, t in [(0, 0.0), (4, 1.0)]:
+        beat(it)
+        rec = json.loads((tmp_path / "pod1.beat").read_text())
+        assert rec["generation"] == 2 and rec["step"] == it
+        assert obs.observe(1, (rec["generation"], rec["counter"]), now=t)
+    assert obs.beats[1].changes == 1
+
+
+# --------------------------------------------------------------------------
+# The real thing: 2 processes, gloo, SIGKILL, supervised resume
+
+
+@pytest.mark.slow
+def test_process_kill_smoke_two_real_processes(tmp_path):
+    if os.environ.get("FUNCSNE_NO_MULTIPROCESS") == "1":
+        pytest.skip("FUNCSNE_NO_MULTIPROCESS=1")
+    from repro.runtime import control
+    if not control.gloo_available():
+        pytest.skip("no gloo CPU collectives in this jaxlib")
+    import repro
+    src = os.path.dirname(list(repro.__path__)[0])
+    env = dict(os.environ, PYTHONPATH=src, XLA_FLAGS="")
+    # subprocess isolation: the scenario spawns its own supervisor and
+    # worker pods; nothing distributed touches this interpreter
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.runtime.faults", "--smoke",
+         "--only", "process_kill"],
+        env=env, cwd=tmp_path, capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "process_kill: OK" in proc.stdout, proc.stdout

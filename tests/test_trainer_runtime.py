@@ -85,5 +85,6 @@ def test_elastic_remesh_shapes():
     from repro.runtime.elastic import remesh, surviving_pods
     mesh = remesh(1, model=16)
     assert mesh.devices.size == 1
-    assert surviving_pods({0: 100.0, 1: 50.0}, timeout_s=30.0,
+    # observer-stamped beat records: (counter, stamped-by-observer)
+    assert surviving_pods({0: (7, 100.0), 1: (3, 50.0)}, timeout_s=30.0,
                           now=110.0) == [0]
