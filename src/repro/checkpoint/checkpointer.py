@@ -287,15 +287,22 @@ class Checkpointer:
                 file_meta = {"crc32": zlib.crc32(blob) & 0xFFFFFFFF,
                              "arrays": arrays_meta}
                 tmp = self.dir / f".tmp-{step}"
+                final = self.dir / f"step_{step:010d}"
                 gen_tag = "" if generation is None \
                     else f"-g{int(generation):06d}"
                 if n_hosts == 1 and generation is None:
+                    # single writer: no commit race is possible, so the
+                    # overwrite-an-existing-step semantics are safe here
                     if tmp.exists():
                         shutil.rmtree(tmp)
                     tmp.mkdir(parents=True)
                     (tmp / "arrays.npz").write_bytes(blob)
                     meta["manifest"] = {"n_hosts": 1,
                                         "files": {"arrays.npz": file_meta}}
+                    (tmp / "meta.json").write_text(json.dumps(meta))
+                    if final.exists():
+                        shutil.rmtree(final)
+                    os.rename(tmp, final)          # atomic commit
                 else:
                     # multi-writer staging: parts land independently,
                     # the completing host commits.  Each host stages its
@@ -313,32 +320,67 @@ class Checkpointer:
                         tmp.glob(f"shard*-of-{n_hosts:03d}{gen_tag}.npz"))
                     if len(parts) < n_hosts:
                         return          # another host completes the set
-                    files = {}
-                    for p in parts:
-                        side = tmp / (p.name + _MANIFEST_SUFFIX)
-                        files[p.name] = json.loads(side.read_text())
-                        side.unlink()
-                    if generation is not None:
-                        # completing writer owns the commit: any file
-                        # still staged that is NOT part of this
-                        # generation's set is a stale shard (or torn
-                        # tmp/sidecar) from a generation that died
-                        # mid-checkpoint -- evict it so it can neither
-                        # merge into this boundary nor linger on disk
-                        keep = {p.name for p in parts}
-                        evicted = []
-                        for f in sorted(tmp.iterdir()):
-                            if f.name not in keep:
-                                f.unlink()
-                                evicted.append(f.name)
-                        if evicted:
-                            meta["evicted_stale"] = evicted
-                    meta["manifest"] = {"n_hosts": n_hosts, "files": files}
-                (tmp / "meta.json").write_text(json.dumps(meta))
-                final = self.dir / f"step_{step:010d}"
-                if final.exists():
-                    shutil.rmtree(final)
-                os.rename(tmp, final)          # atomic commit
+                    # Exactly ONE completing writer may commit: real
+                    # SPMD processes hit the boundary near-
+                    # simultaneously, so BOTH can glob a full set.  The
+                    # commit is claimed with an O_EXCL marker beside the
+                    # staging dir; the race's loser backs off here
+                    # instead of renaming (or deleting!) the winner's
+                    # just-committed step dir.  The claim is generation-
+                    # tagged so a claim left by a writer that died mid-
+                    # commit can never block a relaunched generation
+                    # from committing the same step.
+                    claim = self.dir / f".tmp-{step}.claim{gen_tag}"
+                    try:
+                        os.close(os.open(str(claim),
+                                         os.O_CREAT | os.O_EXCL
+                                         | os.O_WRONLY))
+                    except FileExistsError:
+                        return  # the other completing writer commits
+                    try:
+                        files = {}
+                        for p in parts:
+                            side = tmp / (p.name + _MANIFEST_SUFFIX)
+                            files[p.name] = json.loads(side.read_text())
+                            side.unlink()
+                        if generation is not None:
+                            # completing writer owns the commit: any
+                            # file still staged that is NOT part of this
+                            # generation's set is a stale shard (or torn
+                            # tmp/sidecar) from a generation that died
+                            # mid-checkpoint -- evict it so it can
+                            # neither merge into this boundary nor
+                            # linger on disk
+                            keep = {p.name for p in parts}
+                            evicted = []
+                            for f in sorted(tmp.iterdir()):
+                                if f.name not in keep:
+                                    f.unlink()
+                                    evicted.append(f.name)
+                            if evicted:
+                                meta["evicted_stale"] = evicted
+                        meta["manifest"] = {"n_hosts": n_hosts,
+                                            "files": files}
+                        (tmp / "meta.json").write_text(json.dumps(meta))
+                        # never pre-delete `final` here: with the claim
+                        # released post-commit a straggling writer can
+                        # still reach this point, and an rmtree would
+                        # destroy the committed boundary elastic resume
+                        # depends on.  rename IS the atomic commit; its
+                        # failure with the boundary present just means
+                        # the other writer won.
+                        os.rename(tmp, final)
+                    except OSError:
+                        if (final / "meta.json").exists():
+                            # lost the race: the boundary is committed
+                            claim.unlink(missing_ok=True)
+                            return
+                        raise
+                    for c in self.dir.glob(f".tmp-{step}.claim*"):
+                        try:
+                            c.unlink()
+                        except OSError:     # pragma: no cover
+                            pass
                 self._prune()
             except BaseException as e:        # surfaced on next wait()
                 self.last_error = e

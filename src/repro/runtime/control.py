@@ -99,13 +99,18 @@ class SupervisorError(RuntimeError):
 def gloo_available() -> bool:
     """True when this jaxlib exposes CPU cross-process collectives.
 
-    ``hasattr(jax.config, ...)`` is a false negative for config knobs,
-    so consult the value-holder registry directly.  Imports jax lazily:
-    the supervisor itself must stay JAX-runtime-free."""
+    Feature-detected through the PUBLIC config API -- ``jax.config
+    .update`` raises for unknown option names -- never through private
+    registries a jax refactor can silently rename (``hasattr(jax.config,
+    ...)`` is additionally a false negative for config knobs).  The
+    probe re-writes the current value, so it never changes the probing
+    process's behaviour.  Imports jax lazily: the supervisor itself must
+    stay JAX-runtime-free."""
     try:
         import jax
-        return "jax_cpu_collectives_implementation" \
-            in jax.config._value_holders
+        prev = jax.config.read("jax_cpu_collectives_implementation")
+        jax.config.update("jax_cpu_collectives_implementation", prev)
+        return True
     except Exception:
         return False
 
@@ -265,10 +270,15 @@ class _Worker:
 class Supervisor:
     """Spawns and babysits worker generations (see module docstring).
 
-    ``heartbeat_timeout`` is the steady-state staleness bound; a pod
-    that has not yet made its FIRST progress (runtime init + first-chunk
-    compile are the slow part) is judged against ``startup_grace``
-    instead.  ``kill_pod``/``kill_at_chunk`` arm the deterministic
+    ``heartbeat_timeout`` is the steady-state staleness bound; it only
+    takes over from ``startup_grace`` once a pod publishes a beat from
+    PAST the resume boundary -- i.e. after runtime init and the
+    first-chunk compile, the slow part every relaunch repeats.  (Stale
+    beat files are swept before each generation launches, so leftover
+    counters can never fake that progress.)  A pod whose beat file
+    never appears at all is judged against ``startup_grace`` measured
+    from the generation's spawn.  ``kill_pod``/``kill_at_chunk`` arm
+    the deterministic
     :class:`repro.runtime.faults.ProcessKill` injector in generation 0
     only -- the smoke-test hook for a real SIGKILL mid-run.
     """
@@ -350,6 +360,14 @@ class Supervisor:
 
     def _spawn_generation(self, gen: int, pods: List[int]) -> List[_Worker]:
         port = self.base_port + gen
+        # a fresh generation must not inherit beat files: a stale file
+        # from the previous generation makes the new worker's very
+        # first write read as "progress", silently swapping
+        # startup_grace for the steady-state timeout while the worker
+        # is still in jax.distributed init + first-chunk compile.  The
+        # previous generation is killed AND reaped before we get here,
+        # so no writer can race this sweep.
+        self._clear_beats()
         env = dict(os.environ)
         # workers must resolve `repro` exactly as the supervisor did
         # (repro is a namespace package: derive src from __path__)
@@ -390,11 +408,20 @@ class Supervisor:
 
     # -- the watch loop ---------------------------------------------------
 
+    def _clear_beats(self) -> None:
+        for f in self.hb_dir.glob("pod*.beat*"):    # incl. .tmp strays
+            try:
+                f.unlink()
+            except OSError:     # pragma: no cover
+                pass
+
     def _read_beat(self, pod: int):
+        """``((generation, counter), step)`` from the pod's beat file,
+        or None while it is absent/torn."""
         path = self.hb_dir / f"pod{pod}.beat"
         try:
             b = json.loads(path.read_text())
-            return (b.get("generation"), b.get("counter"))
+            return (b.get("generation"), b.get("counter")), b.get("step")
         except (OSError, ValueError):
             return None
 
@@ -403,6 +430,17 @@ class Supervisor:
         ("done") or a pod dies ("failed", survivors)."""
         obs = elastic.HeartbeatObserver()
         finished, dead = set(), {}
+        spawn_t = time.monotonic()
+        # startup_grace holds until the FIRST post-entry boundary beat.
+        # Workers beat once before runtime init and once on entering the
+        # chunk loop (both BEFORE the first-chunk compile), so counter
+        # changes alone cannot prove the slow part is over; only a beat
+        # whose step is PAST the resume point does.  entry_step is the
+        # boundary this generation resumes from (0 for a fresh run):
+        # the entry beat carries exactly it, the first committed chunk
+        # boundary carries more.
+        entry_step = max([0] + committed_steps(self.ckpt_dir))
+        started = set()
         while True:
             if deadline is not None and time.monotonic() > deadline:
                 raise SupervisorError(
@@ -412,9 +450,13 @@ class Supervisor:
             for w in workers:
                 if w.pod in finished or w.pod in dead:
                     continue
-                counter = self._read_beat(w.pod)
-                if counter is not None:
+                rec = self._read_beat(w.pod)
+                if rec is not None:
+                    counter, step = rec
                     obs.observe(w.pod, counter, now)
+                    if counter[0] == gen and step is not None \
+                            and step > entry_step:
+                        started.add(w.pod)
                 rc = w.proc.poll()
                 if rc is None:
                     continue
@@ -424,17 +466,23 @@ class Supervisor:
                     dead[w.pod] = rc
             if len(finished) == len(workers):
                 return "done", []
-            # per-pod staleness: startup grace until first observed
-            # progress (init + first compile), steady-state bound after
+            # per-pod staleness: startup grace until the first post-
+            # entry boundary beat (init + first compile are behind it),
+            # steady-state bound after.  A pod that never published a
+            # beat file at all is judged against the grace measured
+            # from generation spawn -- it must not escape detection.
             stale = []
             for w in workers:
                 if w.pod in finished or w.pod in dead:
                     continue
                 b = obs.beats.get(w.pod)
-                timeout = self.heartbeat_timeout \
-                    if (b is not None and b.changes > 0) \
+                if b is None:
+                    if now - spawn_t > self.startup_grace:
+                        stale.append(w.pod)
+                    continue
+                timeout = self.heartbeat_timeout if w.pod in started \
                     else self.startup_grace
-                if b is not None and w.pod not in \
+                if w.pod not in \
                         elastic.surviving_pods({w.pod: b}, timeout, now):
                     stale.append(w.pod)
             if dead or stale:
@@ -444,10 +492,11 @@ class Supervisor:
                              via="process_exit", returncode=rc,
                              signal=sig)
                 for pod in stale:
-                    b = obs.beats[pod]
+                    b = obs.beats.get(pod)
+                    last = b.stamped if b is not None else spawn_t
                     self.log("heartbeat_lost", generation=gen, pod=pod,
                              via="timeout",
-                             stale_s=round(now - b.stamped, 3))
+                             stale_s=round(now - last, 3))
                 survivors = [w.pod for w in workers
                              if w.pod not in dead and w.pod not in stale]
                 self._kill_generation(workers, gen)

@@ -117,9 +117,11 @@ class Beat:
     work).  ``stamped`` is the observer's ``time.monotonic()`` at the
     moment the counter last CHANGED (first observation included).
     ``changes`` counts observed changes since the first observation --
-    0 means the pod has published but never been seen to progress, which
-    callers use to apply a startup grace period (first progress includes
-    runtime init + compile)."""
+    0 means the pod has published but never been seen to progress.
+    (Counter changes alone cannot prove a pod is past its slow startup
+    -- workers may beat before runtime init and again on loop entry --
+    so the supervisor gates its startup grace on beat *content*, the
+    step a beat carries, not on this field.)"""
     counter: Hashable
     stamped: float
     changes: int = 0

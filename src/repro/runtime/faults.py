@@ -799,6 +799,10 @@ def main() -> int:
                     choices=["interpret", "xla", "pallas"])
     ap.add_argument("--only", default=None,
                     help="comma-separated scenario names")
+    ap.add_argument("--no-skip", action="store_true",
+                    help="fail any scenario that reports itself skipped "
+                         "(for CI gates that must not silently go "
+                         "vacuous when a capability probe regresses)")
     args = ap.parse_args()
     names = list(SCENARIOS)
     if args.only:
@@ -808,6 +812,15 @@ def main() -> int:
         t0 = time.time()
         try:
             info = SCENARIOS[name](backend=args.backend)
+            if isinstance(info, dict) and "skipped" in info:
+                if args.no_skip:
+                    failed += 1
+                    print(f"[faults] {name}: FAILED: required scenario "
+                          f"skipped: {info['skipped']}", flush=True)
+                else:
+                    print(f"[faults] {name}: skipped: {info['skipped']}",
+                          flush=True)
+                continue
             print(f"[faults] {name}: OK in {time.time() - t0:.1f}s {info}",
                   flush=True)
         except Exception as e:  # pragma: no cover - CI failure surface

@@ -59,11 +59,13 @@ def test_observer_stamps_changes_only():
 def test_observer_startup_grace_signal_and_forget():
     obs = HeartbeatObserver()
     obs.observe("a", 1, now=0.0)
-    # changes == 0: published but never seen to progress -- the
-    # supervisor applies the (long) startup grace to this state
+    # changes == 0: published but never seen to progress.  (The
+    # supervisor's startup-grace cutover is gated on beat CONTENT --
+    # a step past the resume boundary -- because counter changes alone
+    # also happen before the slow first-chunk compile.)
     assert obs.beats["a"].changes == 0
     obs.observe("a", 2, now=3.0)
-    assert obs.beats["a"].changes == 1   # steady-state timeout applies
+    assert obs.beats["a"].changes == 1
     obs.forget("a")
     assert obs.survivors(timeout_s=100.0, now=3.0) == []
 
@@ -127,6 +129,43 @@ def test_stale_generation_shard_evicted_on_commit(tmp_path):
     np.testing.assert_array_equal(got["Y"], _tree(1)["Y"])
 
 
+def test_commit_claim_gates_completing_writer(tmp_path):
+    # two real SPMD writers can BOTH glob a complete shard set at a
+    # near-simultaneous boundary; the O_EXCL claim lets exactly one
+    # commit.  A completing save that finds the claim held must back
+    # off -- neither committing nor erroring.
+    ck = Checkpointer(tmp_path)
+    _save_shard(ck, 8, _tree(0), 0, 2, generation=2)
+    claim = tmp_path / ".tmp-8.claim-g000002"
+    claim.touch()
+    _save_shard(ck, 8, _tree(0), 1, 2, generation=2)  # full set, claimed
+    assert not (tmp_path / "step_0000000008").exists()
+    # claim released: the next completing write claims, commits, and
+    # cleans the claim up
+    claim.unlink()
+    _save_shard(ck, 8, _tree(0), 1, 2, generation=2)
+    assert (tmp_path / "step_0000000008" / "meta.json").exists()
+    assert not claim.exists()
+
+
+def test_commit_race_loser_never_destroys_committed_boundary(tmp_path):
+    # the race's winner committed the boundary ...
+    _save_shard(Checkpointer(tmp_path), 4, _tree(1), 0, 1, generation=1)
+    d = tmp_path / "step_0000000004"
+    winner_meta = (d / "meta.json").read_text()
+    # ... and a straggling writer completes its own staged set for the
+    # SAME step afterwards.  Its commit must fail soft: no rmtree of
+    # the committed step dir, no spurious worker error -- the boundary
+    # elastic resume depends on stays exactly as the winner wrote it.
+    ck = Checkpointer(tmp_path)
+    _save_shard(ck, 4, _tree(2), 0, 2, generation=1)
+    _save_shard(ck, 4, _tree(2), 1, 2, generation=1)   # completing write
+    assert (d / "meta.json").read_text() == winner_meta
+    got, meta = Checkpointer(tmp_path).restore(_tree(0))
+    assert meta["generation"] == 1
+    np.testing.assert_array_equal(got["Y"], _tree(1)["Y"])
+
+
 def test_manifest_filters_planted_stray_shard(tmp_path):
     _save_shard(Checkpointer(tmp_path), 8, _tree(1), 0, 1, generation=1)
     d = tmp_path / "step_0000000008"
@@ -166,6 +205,31 @@ def test_beat_writer_feeds_observer(tmp_path):
         assert rec["generation"] == 2 and rec["step"] == it
         assert obs.observe(1, (rec["generation"], rec["counter"]), now=t)
     assert obs.beats[1].changes == 1
+
+
+def test_read_beat_returns_counter_and_step(tmp_path):
+    from repro.runtime import control
+    sup = control.Supervisor(tmp_path, n_pods=1)
+    assert sup._read_beat(0) is None        # absent file: no reading
+    (sup.hb_dir / "pod0.beat").write_text(json.dumps(
+        {"pod": 0, "generation": 3, "counter": 5, "step": 12}))
+    assert sup._read_beat(0) == ((3, 5), 12)
+    (sup.hb_dir / "pod0.beat").write_text("{torn")
+    assert sup._read_beat(0) is None        # torn file: no reading
+
+
+def test_spawn_sweeps_stale_beat_files(tmp_path):
+    # a relaunched generation must not inherit the dead generation's
+    # beat files: the new worker's first write would read as progress,
+    # cutting startup grace down to the steady-state timeout while the
+    # worker is still compiling
+    from repro.runtime import control
+    sup = control.Supervisor(tmp_path, n_pods=2)
+    (sup.hb_dir / "pod0.beat").write_text(json.dumps(
+        {"pod": 0, "generation": 0, "counter": 7, "step": 8}))
+    (sup.hb_dir / "pod1.beat.tmp").write_text("torn atomic-write stray")
+    sup._clear_beats()
+    assert list(sup.hb_dir.iterdir()) == []
 
 
 # --------------------------------------------------------------------------
